@@ -1,0 +1,53 @@
+"""Paper App. D/E + Fig. 2 mid/right: communication & computation meters.
+
+Reproduces the paper's cost accounting at PAPER scale (MobileNetV2 d=1280,
+Landmarks C=2028 / iNaturalist C=1203, FP32) — these are exact analytic
+quantities, so the reproduction is exact, not directional.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.federated.costs import INATURALIST, LANDMARKS
+
+ALGS = ("fedavg", "fedavgm", "scaffold", "fedavg-lp", "scaffold-lp",
+        "fed3r", "fed3r-rf")
+
+
+def main() -> list:
+    rows = []
+    for ds_name, cm0, K, n_k in (
+        ("landmarks", LANDMARKS, 1262, 119.9),
+        ("inaturalist", INATURALIST, 9275, 13.0),
+    ):
+        cm = cm0.__class__(**{**cm0.__dict__, "D": 10_000})
+        for alg in ALGS:
+            comm = cm.comm_per_client(alg)
+            comp = cm.comp_per_client(alg, n_k)
+            emit(
+                f"appD_{ds_name}_{alg}", 0.0,
+                f"down_params={comm['down']:.3e} up_params={comm['up']:.3e} "
+                f"comp_flops_per_round={comp:.3e}",
+            )
+            rows.append((ds_name, alg, comm, comp))
+
+        # headline ratio (paper §5.2: up to two orders of magnitude)
+        rounds_fed3r = -(-K // 10)  # ⌈K/κ⌉
+        grad_total = cm.comp_per_client("fedavg", n_k) * 3000 * 10 / K
+        f3_total = cm.comp_per_client("fed3r", n_k)
+        emit(
+            f"appE_{ds_name}_compute_ratio", 0.0,
+            f"fedavg_vs_fed3r_x={grad_total / f3_total:.1f} "
+            f"fed3r_rounds_to_exact={rounds_fed3r}",
+        )
+        comm_grad = (cm.comm_per_client("fedavg")["up"] * 2) * 4  # up+down
+        comm_f3 = cm.comm_per_client("fed3r")["up"] * 4
+        emit(
+            f"appD_{ds_name}_comm_per_client_ratio", 0.0,
+            f"fedavg_roundtrip_bytes={comm_grad:.3e} fed3r_once_bytes={comm_f3:.3e} "
+            f"note=fed3r_pays_once_gradFL_pays_every_visit",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Paper Fig. 2 / Fig. 10: FED3R vs gradient-based FL baselines.
+
+Accuracy-vs-rounds plus the communication/computation budget to reach a
+target accuracy (App. D/E meters).  Baselines are the LP (linear-probe)
+variants the paper compares against in the frozen-extractor regime:
+FedAvg-LP, FedAvgM-LP, Scaffold-LP.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import C, D, K, emit, f3_cfg, fed_cfg, landmarks_like, timed
+from repro.federated import run_fed3r
+from repro.federated.costs import CostModel
+from repro.federated.simulator import linear_head_task, run_federated
+
+TARGET = 0.95  # fraction of the FED3R final accuracy used as the target
+ROUNDS = 200
+
+
+def rounds_to(hist_rounds, hist_acc, target):
+    for r, a in zip(hist_rounds, hist_acc):
+        if a >= target:
+            return r
+    return float("inf")
+
+
+def main() -> list:
+    fed, test = landmarks_like()
+    cm = CostModel(b=2.22e6, d=D, C=C, E=1)
+    rows = []
+
+    # --- FED3R ---------------------------------------------------------------
+    with timed() as t:
+        _, _, h3 = run_fed3r(fed, test.features, test.labels, f3_cfg(),
+                             fed_cfg(n_rounds=1000), eval_every=1)
+    acc3 = h3.accuracy[-1]
+    target = TARGET * acc3
+    r3 = rounds_to(h3.rounds, h3.accuracy, target)
+    comm3 = cm.comm_per_client("fed3r")["up"] * 4 * 10 * r3
+    comp3 = cm.comp_per_client("fed3r", fed.client_sizes().mean())
+    emit("fig2_fed3r", t["s"] * 1e6 / max(h3.rounds[-1], 1),
+         f"final={acc3:.4f} rounds_to_target={r3} comm_bytes={comm3:.3e} comp_flops={comp3:.3e}")
+    rows.append(("fed3r", acc3, r3, comm3, comp3))
+
+    # --- gradient LP baselines ------------------------------------------------
+    for alg, smom in [("fedavg", 0.0), ("fedavgm", 0.9), ("scaffold", 0.0)]:
+        task = linear_head_task(D, C, test.features, test.labels)
+        cfg = fed_cfg(algorithm=alg, n_rounds=ROUNDS, server_momentum=smom)
+        with timed() as t:
+            _, h = run_federated(task, fed, cfg, eval_every=2)
+        r = rounds_to(h.rounds, h.accuracy, target)
+        eff_r = r if np.isfinite(r) else ROUNDS
+        comm = cm.comm_per_client(f"{'fedavg' if alg!='scaffold' else 'scaffold'}-lp")["up"] * 4 * 10 * eff_r
+        comp = cm.cumulative_comp_flops_per_client(
+            f"{'fedavg' if alg != 'scaffold' else 'scaffold'}-lp", int(eff_r), 10, K,
+            fed.client_sizes().mean(),
+        )[-1]
+        speedup = (r / r3) if np.isfinite(r) else float("inf")
+        emit(f"fig2_{alg}_lp", t["s"] * 1e6 / ROUNDS,
+             f"final={h.accuracy[-1]:.4f} rounds_to_target={r} "
+             f"fed3r_speedup_x={speedup:.1f} comm_bytes={comm:.3e} comp_flops={comp:.3e}")
+        rows.append((alg, h.accuracy[-1], r, comm, comp))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""§Roofline report generator: reads the dry-run JSONL and prints the table.
+
+For each (arch × shape): the three roofline terms (seconds), the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS usefulness ratio, per-device memory and
+the fits-HBM verdict.  Used to build EXPERIMENTS.md §Roofline and to pick
+the hillclimb targets.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import List
+
+from benchmarks.common import emit
+
+DEFAULT_PATH = "results/dryrun_singlepod.jsonl"
+
+
+def load(path: str) -> List[dict]:
+    recs = {}
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r.get("kind"), r["mesh"])] = r
+    return list(recs.values())
+
+
+def main(path: str = DEFAULT_PATH) -> list:
+    recs = load(path)
+    if not recs:
+        emit("roofline_missing", 0.0, f"no dry-run records at {path}")
+        return []
+    rows = []
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        tag = f"roofline_{r['arch']}_{r['shape']}"
+        if r["status"] == "skipped":
+            emit(tag, 0.0, f"SKIP {r.get('skip_reason','')}")
+            continue
+        if r["status"] != "ok":
+            emit(tag, 0.0, f"ERROR {r.get('error','')[:80]}")
+            continue
+        rl = r.get("roofline")
+        if not rl:
+            emit(tag, r.get("compile_s", 0) * 1e6,
+                 f"mem={r.get('per_device_gb')}GB fits={r.get('fits_hbm')}")
+            continue
+        ratio = r.get("useful_flops_ratio")
+        emit(
+            tag,
+            r["compile_s"] * 1e6,
+            f"compute_s={rl['compute_s']:.4f} memory_s={rl['memory_s']:.4f} "
+            f"collective_s={rl['collective_s']:.4f} dom={rl['dominant']} "
+            f"useful_ratio={ratio:.3f} mem_gb={r.get('per_device_gb')} "
+            f"fits={r.get('fits_hbm')}",
+        )
+        rows.append(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else DEFAULT_PATH)

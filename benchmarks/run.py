@@ -1,0 +1,59 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Mapping to paper artifacts:
+
+  bench_invariance       Fig. 1 / Fig. 9   split-invariance & centralized eq.
+  bench_vs_baselines     Fig. 2 / Fig. 10  FED3R vs FedAvg(M)/Scaffold-LP
+  bench_sampling         Fig. 3            participation rates ± replacement
+  bench_ncm              Table 1 / Table 6 FED3R family vs FedNCM
+  bench_ft               Table 2 / Fig. 4/5/11  FT / FT-LP / FT-FEAT grid
+  bench_feature_quality  Table 3           RR probe of fine-tuned features
+  bench_rf               Fig. 8            RF sweep vs exact-KRR ceiling
+  bench_costs            App. D/E          exact cost meters @ paper scale
+  bench_coupon           Table 7 / App. I  batch coupon collector
+  bench_kernels          (kernels)         Pallas-vs-oracle + XLA timing
+  roofline               §Roofline         dry-run roofline table
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_costs",
+    "bench_coupon",
+    "bench_kernels",
+    "bench_invariance",
+    "bench_ncm",
+    "bench_rf",
+    "bench_sampling",
+    "bench_vs_baselines",
+    "bench_ft",
+    "bench_feature_quality",
+    "roofline",
+]
+
+
+def main() -> None:
+    only = sys.argv[1:] or None
+    print("name,us_per_call,derived")
+    failures = []
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            failures.append(name)
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"failed benchmarks: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: FED3R in ~40 lines.
+
+A heterogeneous federation (one class per client), a frozen feature space,
+and the closed-form federated ridge classifier — converging exactly in
+⌈K/κ⌉ rounds and matching the centralized solution to float precision.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import Fed3RConfig, FederatedConfig
+from repro.core import fed3r
+from repro.data import make_federated_features
+from repro.federated import run_fed3r
+
+# 100 clients, pathological heterogeneity: every client holds ONE class.
+fed, test = make_federated_features(
+    seed=0, n=8000, d=64, n_classes=10, n_clients=100, alpha=0.0, noise=2.0
+)
+
+f3 = Fed3RConfig(ridge_lambda=0.01, n_classes=10)
+fc = FederatedConfig(n_clients=100, clients_per_round=10, n_rounds=100)
+
+W, stats, hist = run_fed3r(fed, test.features, test.labels, f3, fc, eval_every=1)
+
+print("round | clients seen | test accuracy")
+for r, seen, acc in zip(hist.rounds, hist.clients_seen, hist.accuracy):
+    print(f"{r:5d} | {seen:12d} | {acc:.4f}")
+
+# exact equivalence with the centralized ridge solution (paper §4.3)
+cen = fed3r.solve(
+    fed3r.client_stats(jnp.asarray(fed.features), jnp.asarray(fed.labels), 10),
+    f3.ridge_lambda,
+)
+gap = float(jnp.max(jnp.abs(W - cen)))
+print(f"\nconverged in {hist.rounds[-1]} rounds (= ceil(100/10))")
+print(f"max |W_federated - W_centralized| = {gap:.2e}  (exact aggregation)")

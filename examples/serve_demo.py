@@ -1,0 +1,16 @@
+"""Serve a batch of requests against any architecture family.
+
+Exercises the inference substrate: batched prefill, ring-buffer KV caches,
+SSM/RG-LRU constant-memory decode, sliding windows, enc-dec cross caches.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+from repro.launch.serve import serve
+
+for arch in (
+    "qwen2-7b-smoke",          # dense GQA + ring KV cache
+    "mamba2-1.3b-smoke",       # attention-free O(1)-state decode
+    "recurrentgemma-9b-smoke", # hybrid RG-LRU + local attention
+    "whisper-large-v3-smoke",  # enc-dec with cross-attention cache
+):
+    serve(arch, batch=2, prompt_len=32, gen=12)

@@ -1,0 +1,39 @@
+"""Softmax-temperature calibration of the FED3R initialization (paper §4.4).
+
+The RR solution minimizes squared loss, so its score scale does not match the
+cross-entropy landscape used in fine-tuning.  The paper calibrates by scanning
+softmax temperatures and picking the one minimizing training CE (App. C,
+Fig. 7 — best temperature 0.1 on both datasets).  We fold 1/T into the
+classifier weights so the FT phase starts from W/T with an ordinary softmax.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_TEMPERATURES = (3.0, 1.0, 0.3, 0.1, 0.03, 0.01)
+
+
+def ce_at_temperature(scores: jax.Array, labels: jax.Array, temp: jax.Array) -> jax.Array:
+    logits = scores.astype(jnp.float32) / temp
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - picked)
+
+
+def calibrate_temperature(
+    scores: jax.Array,  # (n, C) RR scores on (a sample of) the training set
+    labels: jax.Array,  # (n,)
+    temperatures=DEFAULT_TEMPERATURES,
+) -> Tuple[jax.Array, jax.Array]:
+    """Grid-search the temperature. Returns (best_temp, per-temp CE)."""
+    temps = jnp.asarray(temperatures, jnp.float32)
+    ces = jax.vmap(lambda t: ce_at_temperature(scores, labels, t))(temps)
+    return temps[jnp.argmin(ces)], ces
+
+
+def fold_temperature(W: jax.Array, temp: jax.Array) -> jax.Array:
+    """Return the calibrated softmax-classifier init W/T."""
+    return W / temp

@@ -1,0 +1,166 @@
+"""FED3R — Federated Recursive Ridge Regression (paper §4).
+
+The paper's contribution, as a composable JAX module.  Everything here is a
+pure function over a tiny ``Fed3RStats`` pytree so the same code runs:
+
+* in the **simulator** (python round loop, ``merge`` = server aggregation),
+* in the **distributed runtime** (``aggregate_mesh`` = ``psum`` over the
+  ("pod", "data") mesh axes — the paper's client→server aggregation mapped
+  onto an all-reduce; exactness of the sum *is* the paper's immunity claim),
+* in **streaming/online** mode (``woodbury_update`` — the recursive
+  least-squares formulation of Eq. (3), Sherman–Morrison–Woodbury).
+
+Statistics (Eq. 5/6):
+    A = Σ_k Σ_{(x,y)∈D_k} φ(x)φ(x)ᵀ          (d×d, fp32)
+    b = Σ_k Σ_{(x,y)∈D_k} φ(x) e_yᵀ           (d×C, fp32)
+Solve (Eq. 4):  W* = (A + λI)⁻¹ b, then per-class column normalization.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class Fed3RStats(NamedTuple):
+    """Sufficient statistics of the ridge-regression classifier."""
+
+    A: jax.Array  # (d, d) fp32 feature second moment
+    b: jax.Array  # (d, C) fp32 class-conditional feature sums
+    n: jax.Array  # () fp32 sample count (diagnostics / NCM reuse)
+
+
+def init_stats(d: int, n_classes: int) -> Fed3RStats:
+    return Fed3RStats(
+        A=jnp.zeros((d, d), jnp.float32),
+        b=jnp.zeros((d, n_classes), jnp.float32),
+        n=jnp.zeros((), jnp.float32),
+    )
+
+
+def client_stats(
+    features: jax.Array,  # (n, d) — φ(x), any float dtype
+    labels: jax.Array,  # (n,) int32
+    n_classes: int,
+    mask: Optional[jax.Array] = None,  # (n,) 1.0 = real sample, 0.0 = padding
+) -> Fed3RStats:
+    """Local statistics A_k, b_k of one client (Algorithm 1, client side).
+
+    ``mask`` lets several clients share one padded batch (clients-per-shard
+    batching in the distributed runtime) while keeping the sums exact.
+    """
+    z = features.astype(jnp.float32)
+    if mask is not None:
+        z = z * mask.astype(jnp.float32)[:, None]
+    y = jax.nn.one_hot(labels, n_classes, dtype=jnp.float32)
+    if mask is not None:
+        y = y * mask.astype(jnp.float32)[:, None]
+    A = z.T @ z
+    b = z.T @ y
+    n = jnp.sum(mask.astype(jnp.float32)) if mask is not None else jnp.asarray(
+        float(features.shape[0]), jnp.float32
+    )
+    return Fed3RStats(A=A, b=b, n=n)
+
+
+def merge(*stats: Fed3RStats) -> Fed3RStats:
+    """Server aggregation: associative+commutative sum of client statistics.
+
+    Invariance to the client split and sampling order (paper §4.3) is the
+    reassociation freedom of this sum.
+    """
+    return Fed3RStats(
+        A=sum(s.A for s in stats),
+        b=sum(s.b for s in stats),
+        n=sum(s.n for s in stats),
+    )
+
+
+def aggregate_mesh(stats: Fed3RStats, axis_names: Sequence[str]) -> Fed3RStats:
+    """Distributed aggregation: psum over mesh axes (inside shard_map)."""
+    return jax.tree.map(lambda a: jax.lax.psum(a, tuple(axis_names)), stats)
+
+
+def solve(
+    stats: Fed3RStats,
+    ridge_lambda: float,
+    normalize: bool = True,
+) -> jax.Array:
+    """Closed-form classifier W* = (A + λI)⁻¹ b (Eq. 4) via Cholesky.
+
+    A + λI ≻ 0 for λ > 0, so the Cholesky factorization always exists.
+    Optional per-class column normalization (paper, after Eq. 6):
+    W*_c ← W*_c / ‖W*_c‖.
+    """
+    d = stats.A.shape[0]
+    A_reg = stats.A + ridge_lambda * jnp.eye(d, dtype=jnp.float32)
+    L = jax.scipy.linalg.cho_factor(A_reg, lower=True)
+    W = jax.scipy.linalg.cho_solve(L, stats.b)
+    if normalize:
+        norms = jnp.linalg.norm(W, axis=0, keepdims=True)
+        W = W / jnp.maximum(norms, 1e-12)
+    return W
+
+
+def predict(W: jax.Array, features: jax.Array) -> jax.Array:
+    """One-vs-rest scores f(x) = Wᵀφ(x): (n, C)."""
+    return features.astype(jnp.float32) @ W
+
+
+def accuracy(W: jax.Array, features: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(predict(W, features), axis=-1) == labels).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Recursive (online) formulation — Sherman–Morrison–Woodbury updates
+# ---------------------------------------------------------------------------
+
+
+class Fed3ROnline(NamedTuple):
+    """Online RR state carrying A⁻¹ directly (recursive least squares).
+
+    Equivalent to the batch statistics path; useful when a deployment wants
+    O(d²) per-round updates of the *solution* instead of re-solving.
+
+    Numerical caution: with λ ≪ tr(A)/d the initial A⁻¹ = I/λ is orders of
+    magnitude larger than the converged inverse, so the subtractive Woodbury
+    update suffers catastrophic cancellation in fp32.  Production use should
+    either keep this state in float64 (enable jax_enable_x64) or prefer the
+    batch-statistics path (init_stats/client_stats/merge/solve), which is the
+    paper's Algorithm 1 and has no such issue.
+    """
+
+    Ainv: jax.Array  # (d, d) fp32 — (A + λI)⁻¹
+    b: jax.Array  # (d, C)
+
+
+def init_online(d: int, n_classes: int, ridge_lambda: float) -> Fed3ROnline:
+    return Fed3ROnline(
+        Ainv=jnp.eye(d, dtype=jnp.float32) / ridge_lambda,
+        b=jnp.zeros((d, n_classes), jnp.float32),
+    )
+
+
+def woodbury_update(state: Fed3ROnline, features: jax.Array, labels: jax.Array) -> Fed3ROnline:
+    """Rank-n update with a new client's batch Z (n, d):
+
+    (A + ZᵀZ)⁻¹ = A⁻¹ − A⁻¹Zᵀ (I + Z A⁻¹ Zᵀ)⁻¹ Z A⁻¹
+    """
+    Z = features.astype(jnp.float32)
+    n = Z.shape[0]
+    C = state.b.shape[1]
+    AiZt = state.Ainv @ Z.T  # (d, n)
+    K = jnp.eye(n, dtype=jnp.float32) + Z @ AiZt  # (n, n)
+    L = jax.scipy.linalg.cho_factor(K, lower=True)
+    Ainv = state.Ainv - AiZt @ jax.scipy.linalg.cho_solve(L, AiZt.T)
+    b = state.b + Z.T @ jax.nn.one_hot(labels, C, dtype=jnp.float32)
+    return Fed3ROnline(Ainv=Ainv, b=b)
+
+
+def online_solution(state: Fed3ROnline, normalize: bool = True) -> jax.Array:
+    W = state.Ainv @ state.b
+    if normalize:
+        norms = jnp.linalg.norm(W, axis=0, keepdims=True)
+        W = W / jnp.maximum(norms, 1e-12)
+    return W

@@ -1,0 +1,56 @@
+"""FedNCM baseline (Legate et al. 2023a) — Nearest Class Mean classifier.
+
+The paper's Table 1/6 ablation: like FED3R, FedNCM aggregates exactly
+(per-class feature sums + counts are associative), but the classifier is the
+matrix of normalized class centroids instead of the ridge solution.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class NCMStats(NamedTuple):
+    sums: jax.Array  # (C, d) per-class feature sums
+    counts: jax.Array  # (C,) per-class sample counts
+
+
+def init_stats(d: int, n_classes: int) -> NCMStats:
+    return NCMStats(
+        sums=jnp.zeros((n_classes, d), jnp.float32),
+        counts=jnp.zeros((n_classes,), jnp.float32),
+    )
+
+
+def client_stats(
+    features: jax.Array, labels: jax.Array, n_classes: int,
+    mask: Optional[jax.Array] = None,
+) -> NCMStats:
+    z = features.astype(jnp.float32)
+    oh = jax.nn.one_hot(labels, n_classes, dtype=jnp.float32)  # (n, C)
+    if mask is not None:
+        oh = oh * mask.astype(jnp.float32)[:, None]
+    return NCMStats(sums=oh.T @ z, counts=jnp.sum(oh, axis=0))
+
+
+def merge(*stats: NCMStats) -> NCMStats:
+    return NCMStats(
+        sums=sum(s.sums for s in stats), counts=sum(s.counts for s in stats)
+    )
+
+
+def solve(stats: NCMStats, normalize: bool = True) -> jax.Array:
+    """Classifier W (d, C): column c = (normalized) class centroid."""
+    means = stats.sums / jnp.maximum(stats.counts, 1.0)[:, None]  # (C, d)
+    W = means.T
+    if normalize:
+        norms = jnp.linalg.norm(W, axis=0, keepdims=True)
+        W = W / jnp.maximum(norms, 1e-12)
+    return W
+
+
+def accuracy(W: jax.Array, features: jax.Array, labels: jax.Array) -> jax.Array:
+    scores = features.astype(jnp.float32) @ W
+    return jnp.mean((jnp.argmax(scores, -1) == labels).astype(jnp.float32))

@@ -1,0 +1,61 @@
+"""RR as a feature-quality probe (paper §5.4, Table 3).
+
+Fitting the closed-form RR classifier on a (possibly fine-tuned) extractor's
+features gives a deterministic, hyper-parameter-free measure of feature
+linear separability — decoupling extractor quality from classifier quality.
+In federated settings the probe is computed through the FED3R formulation,
+so it is itself unaffected by heterogeneity.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fed3r
+
+
+class ProbeResult(NamedTuple):
+    accuracy: jax.Array
+    W: jax.Array
+
+
+def fit_probe(
+    features: jax.Array,
+    labels: jax.Array,
+    n_classes: int,
+    ridge_lambda: float = 0.01,
+) -> jax.Array:
+    """Fit RR on (features, labels); returns the classifier W."""
+    stats = fed3r.client_stats(features, labels, n_classes)
+    return fed3r.solve(stats, ridge_lambda)
+
+
+def probe_quality(
+    train_features: jax.Array,
+    train_labels: jax.Array,
+    test_features: jax.Array,
+    test_labels: jax.Array,
+    n_classes: int,
+    ridge_lambda: float = 0.01,
+) -> ProbeResult:
+    """Train-on-train, evaluate-on-test RR accuracy — the Table-3 number."""
+    W = fit_probe(train_features, train_labels, n_classes, ridge_lambda)
+    acc = fed3r.accuracy(W, test_features, test_labels)
+    return ProbeResult(accuracy=acc, W=W)
+
+
+def probe_extractor(
+    extract_fn: Callable[[dict], jax.Array],
+    batches: Iterable[Tuple[dict, jax.Array]],
+    n_classes: int,
+    d: int,
+    ridge_lambda: float = 0.01,
+) -> jax.Array:
+    """Streaming probe: accumulate FED3R stats over an extractor's batches."""
+    stats = fed3r.init_stats(d, n_classes)
+    for batch, labels in batches:
+        feats = extract_fn(batch)
+        stats = fed3r.merge(stats, fed3r.client_stats(feats, labels, n_classes))
+    return fed3r.solve(stats, ridge_lambda)

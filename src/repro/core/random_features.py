@@ -1,0 +1,48 @@
+"""Random Fourier Features for FED3R-RF (paper §4.2, Rahimi & Recht 2007).
+
+Approximates the RBF kernel k(z, ζ) = exp(−‖z−ζ‖²/2σ²) with the feature map
+
+    ψ(z) = √(2/D) · cos(Ωᵀ z + β),    Ω_ij ~ N(0, σ⁻²),  β_j ~ U[0, 2π).
+
+ψ is data-independent, so all clients share one (Ω, β) drawn by the server —
+FED3R-RF keeps the exact-aggregation property in the D-dimensional space.
+The paper uses σ = 1000 and D ∈ {5k, 10k} (App. C/F).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RFFParams(NamedTuple):
+    omega: jax.Array  # (d, D) fp32
+    beta: jax.Array  # (D,) fp32
+    sigma: jax.Array  # () fp32 (kept for bookkeeping)
+
+
+def rff_init(rng: jax.Array, d: int, n_features: int, sigma: float) -> RFFParams:
+    r1, r2 = jax.random.split(rng)
+    omega = jax.random.normal(r1, (d, n_features), jnp.float32) / sigma
+    beta = jax.random.uniform(r2, (n_features,), jnp.float32, 0.0, 2.0 * jnp.pi)
+    return RFFParams(omega=omega, beta=beta, sigma=jnp.asarray(sigma, jnp.float32))
+
+
+def rff_map(params: RFFParams, z: jax.Array) -> jax.Array:
+    """ψ(z): (n, d) -> (n, D), fp32."""
+    D = params.omega.shape[1]
+    proj = z.astype(jnp.float32) @ params.omega + params.beta
+    return jnp.sqrt(2.0 / D) * jnp.cos(proj)
+
+
+def rbf_kernel(z1: jax.Array, z2: jax.Array, sigma: float) -> jax.Array:
+    """Exact RBF kernel matrix (for validating the RFF approximation)."""
+    z1 = z1.astype(jnp.float32)
+    z2 = z2.astype(jnp.float32)
+    sq = (
+        jnp.sum(z1**2, -1)[:, None]
+        - 2.0 * z1 @ z2.T
+        + jnp.sum(z2**2, -1)[None, :]
+    )
+    return jnp.exp(-sq / (2.0 * sigma**2))

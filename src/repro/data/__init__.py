@@ -1,0 +1,11 @@
+from repro.data.partition import (  # noqa: F401
+    dirichlet_partition,
+    iid_partition,
+    quantity_skew_sizes,
+)
+from repro.data.synthetic import (  # noqa: F401
+    FeatureDataset,
+    make_feature_dataset,
+    make_token_dataset,
+)
+from repro.data.pipeline import ClientData, FederatedDataset, make_federated_features  # noqa: F401

@@ -1,0 +1,97 @@
+"""Client-side data pipeline: per-client views, batching, padding.
+
+``FederatedDataset`` is the simulator's handle on a partitioned dataset:
+one global array store + per-client index lists (zero-copy views).  The
+distributed runtime instead consumes globally-sharded batches where each
+data shard carries a *group* of clients with a client-id mask (see
+federated/fed3r_driver.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import FeatureDataset, make_feature_dataset
+
+
+@dataclass
+class ClientData:
+    features: np.ndarray  # (n_k, d) or tokens (n_k, S)
+    labels: np.ndarray  # (n_k,)
+
+    @property
+    def n(self) -> int:
+        return len(self.labels)
+
+    def batches(
+        self, batch_size: int, rng: Optional[np.random.Generator] = None,
+        epochs: int = 1,
+    ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        for _ in range(epochs):
+            order = (
+                rng.permutation(self.n) if rng is not None else np.arange(self.n)
+            )
+            for s in range(0, self.n, batch_size):
+                sel = order[s : s + batch_size]
+                yield self.features[sel], self.labels[sel]
+
+
+@dataclass
+class FederatedDataset:
+    features: np.ndarray
+    labels: np.ndarray
+    client_indices: List[np.ndarray]
+    n_classes: int
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.client_indices)
+
+    def client(self, k: int) -> ClientData:
+        idx = self.client_indices[k]
+        return ClientData(self.features[idx], self.labels[idx])
+
+    def client_sizes(self) -> np.ndarray:
+        return np.array([len(ix) for ix in self.client_indices])
+
+    def repartition(self, rng: np.random.Generator, n_clients: int, alpha: float
+                    ) -> "FederatedDataset":
+        """Same underlying D, different federated split — the Fig. 1 probe."""
+        parts = dirichlet_partition(rng, self.labels, n_clients, alpha)
+        return FederatedDataset(self.features, self.labels, parts, self.n_classes)
+
+
+def make_federated_features(
+    seed: int,
+    n: int,
+    d: int,
+    n_classes: int,
+    n_clients: int,
+    alpha: float,
+    *,
+    nonlinear: bool = False,
+    noise: float = 1.0,
+    test_frac: float = 0.2,
+) -> Tuple[FederatedDataset, FeatureDataset]:
+    """Build a heterogeneous federated feature dataset + held-out test set."""
+    ds = make_feature_dataset(
+        jax.random.PRNGKey(seed), n, d, n_classes, nonlinear=nonlinear, noise=noise
+    )
+    feats = np.asarray(ds.features)
+    labels = np.asarray(ds.labels)
+    n_test = int(n * test_frac)
+    test = FeatureDataset(
+        features=jnp.asarray(feats[:n_test]),
+        labels=jnp.asarray(labels[:n_test]),
+        n_classes=n_classes,
+    )
+    tr_feats, tr_labels = feats[n_test:], labels[n_test:]
+    rng = np.random.default_rng(seed + 1)
+    parts = dirichlet_partition(rng, tr_labels, n_clients, alpha)
+    fed = FederatedDataset(tr_feats, tr_labels, parts, n_classes)
+    return fed, test

@@ -1,0 +1,9 @@
+from repro.federated.algorithms import FLAlgorithm, make_algorithm  # noqa: F401
+from repro.federated.sampling import ClientSampler  # noqa: F401
+from repro.federated.simulator import FLTask, run_federated  # noqa: F401
+from repro.federated.fed3r_driver import (  # noqa: F401
+    run_fed3r,
+    run_fed3r_ft,
+    run_fedncm,
+)
+from repro.federated import costs  # noqa: F401

@@ -1,0 +1,225 @@
+"""Gradient-based FL algorithms: FedAvg, FedAvgM, FedProx, Scaffold (+ LP).
+
+All four share one jitted ``local_update``:
+
+* local SGD over padded client batches (padding batches are exact no-ops);
+* optional proximal term (FedProx: + μ/2‖θ−θ_g‖²);
+* optional Scaffold control-variate correction (g − c_k + c) and the
+  Option-II variate update c_k' = c_k − c + (θ_g − θ_k)/(steps·lr);
+* a ``freeze`` mask (pytree of 0/1) implementing the LP variants and the
+  FED3R+FT strategies: FT (all 1), FT-LP (extractor 0), FT-FEAT (head 0).
+
+Server side: weighted-average of client deltas, then a server optimizer
+step (SGD; momentum > 0 gives FedAvgM, Hsu et al. 2019).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LocalResult(NamedTuple):
+    delta: Any  # θ_k − θ_g (masked by freeze)
+    n_samples: jax.Array  # effective client size (aggregation weight)
+    new_cvar: Any  # updated client control variate (scaffold) or None-like
+
+
+@dataclass(frozen=True)
+class FLAlgorithm:
+    name: str
+    uses_cvar: bool  # scaffold
+    prox_mu: float
+    server_momentum: float
+    server_opt: str = "sgd"  # sgd | adam | yogi (Reddi et al. 2021)
+
+
+def make_algorithm(
+    name: str, *, prox_mu: float = 0.01, server_momentum: float = 0.9
+) -> FLAlgorithm:
+    name = name.lower()
+    if name == "fedavg":
+        return FLAlgorithm("fedavg", False, 0.0, 0.0)
+    if name == "fedavgm":
+        return FLAlgorithm("fedavgm", False, 0.0, server_momentum)
+    if name == "fedprox":
+        return FLAlgorithm("fedprox", False, prox_mu, 0.0)
+    if name == "scaffold":
+        return FLAlgorithm("scaffold", True, 0.0, 0.0)
+    if name == "fedadam":
+        return FLAlgorithm("fedadam", False, 0.0, 0.9, server_opt="adam")
+    if name == "fedyogi":
+        return FLAlgorithm("fedyogi", False, 0.0, 0.9, server_opt="yogi")
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# client local update
+# ---------------------------------------------------------------------------
+
+
+def make_local_update(
+    loss_fn: Callable[[Any, Dict[str, jax.Array]], jax.Array],
+    algo: FLAlgorithm,
+    *,
+    lr: float,
+    weight_decay: float = 0.0,
+):
+    """Build the jitted local-update fn.
+
+    Batches arrive padded to a fixed shape: ``batches`` is a dict of arrays
+    with leading dims (n_batches, batch_size, ...) plus ``mask``
+    (n_batches, batch_size).  Empty padding batches contribute exactly zero.
+    """
+
+    def masked_loss(params, batch):
+        per = loss_fn(params, batch)  # (batch_size,) per-example losses
+        m = batch["mask"].astype(jnp.float32)
+        return jnp.sum(per * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def local_update(global_params, batches, freeze, c_server, c_client):
+        n_batches = jax.tree.leaves(batches)[0].shape[0]
+
+        def step(params, batch):
+            has = (jnp.sum(batch["mask"]) > 0).astype(jnp.float32)
+            grads = jax.grad(masked_loss)(params, batch)
+            if algo.prox_mu > 0.0:
+                grads = jax.tree.map(
+                    lambda g, p, p0: g + algo.prox_mu * (p - p0),
+                    grads, params, global_params,
+                )
+            if weight_decay > 0.0:
+                grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+            if algo.uses_cvar:
+                grads = jax.tree.map(
+                    lambda g, ck, cs: g - ck + cs, grads, c_client, c_server
+                )
+            # freeze mask + padding no-op
+            params = jax.tree.map(
+                lambda p, g, f: p - lr * has * f * g, params, grads, freeze
+            )
+            return params, None
+
+        def body(params, batch):
+            return step(params, batch)
+
+        params, _ = jax.lax.scan(body, global_params, batches)
+
+        delta = jax.tree.map(lambda p, p0, f: (p - p0) * f, params, global_params, freeze)
+        n_eff = jnp.sum(batches["mask"])
+
+        if algo.uses_cvar:
+            # Scaffold Option II: c_k' = c_k − c + (θ_g − θ_k)/(steps·lr)
+            steps = jnp.maximum(
+                jnp.sum((jnp.sum(batches["mask"], axis=1) > 0).astype(jnp.float32)),
+                1.0,
+            )
+            new_c = jax.tree.map(
+                lambda ck, cs, dlt: ck - cs - dlt / (steps * lr),
+                c_client, c_server, delta,
+            )
+        else:
+            new_c = c_client
+        return LocalResult(delta=delta, n_samples=n_eff, new_cvar=new_c)
+
+    return local_update
+
+
+# ---------------------------------------------------------------------------
+# server aggregation
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("server_momentum_on",))
+def _server_step(params, weighted_deltas, weights_sum, momentum_buf, slr, smom,
+                 server_momentum_on: bool):
+    avg_delta = jax.tree.map(lambda d: d / weights_sum, weighted_deltas)
+    if server_momentum_on:
+        momentum_buf = jax.tree.map(
+            lambda m, d: smom * m + d, momentum_buf, avg_delta
+        )
+        step = momentum_buf
+    else:
+        step = avg_delta
+    params = jax.tree.map(lambda p, s: p + slr * s, params, step)
+    return params, momentum_buf
+
+
+@functools.partial(jax.jit, static_argnames=("yogi",))
+def _adaptive_server_step(params, avg_delta, m, v, t, slr, yogi: bool,
+                          b1=0.9, b2=0.99, eps=1e-3):
+    """FedAdam / FedYogi (Reddi et al. 2021): adaptive server optimizer
+    treating the aggregated client delta as a pseudo-gradient."""
+    t = t + 1
+    m = jax.tree.map(lambda m_, d: b1 * m_ + (1 - b1) * d, m, avg_delta)
+    if yogi:
+        v = jax.tree.map(
+            lambda v_, d: v_ - (1 - b2) * jnp.square(d) * jnp.sign(v_ - jnp.square(d)),
+            v, avg_delta,
+        )
+    else:
+        v = jax.tree.map(lambda v_, d: b2 * v_ + (1 - b2) * jnp.square(d), v, avg_delta)
+    params = jax.tree.map(
+        lambda p, m_, v_: p + slr * m_ / (jnp.sqrt(jnp.maximum(v_, 0.0)) + eps),
+        params, m, v,
+    )
+    return params, m, v, t
+
+
+class Server:
+    """FedAvg-family server: weighted delta aggregation + server optimizer."""
+
+    def __init__(self, algo: FLAlgorithm, params, *, server_lr: float = 1.0):
+        self.algo = algo
+        self.params = params
+        self.server_lr = server_lr
+        self.momentum_buf = (
+            jax.tree.map(jnp.zeros_like, params) if algo.server_momentum > 0 else None
+        )
+        self.c_server = (
+            jax.tree.map(jnp.zeros_like, params) if algo.uses_cvar else None
+        )
+        self.adaptive = algo.server_opt in ("adam", "yogi")
+        if self.adaptive:
+            self.m = jax.tree.map(jnp.zeros_like, params)
+            self.v = jax.tree.map(lambda p: jnp.full(p.shape, 1e-6), params)
+            self.t = jnp.zeros((), jnp.int32)
+
+    def aggregate(self, results, n_total_clients: Optional[int] = None,
+                  cvar_deltas: Optional[list] = None):
+        weights = jnp.asarray([float(r.n_samples) for r in results], jnp.float32)
+        wsum = jnp.sum(weights)
+        weighted = jax.tree.map(
+            lambda *ds: sum(w * d for w, d in zip(weights, ds)), *[r.delta for r in results]
+        )
+        if self.adaptive:
+            avg_delta = jax.tree.map(lambda d: d / wsum, weighted)
+            self.params, self.m, self.v, self.t = _adaptive_server_step(
+                self.params, avg_delta, self.m, self.v, self.t,
+                jnp.asarray(self.server_lr, jnp.float32),
+                self.algo.server_opt == "yogi",
+            )
+        else:
+            mom = self.momentum_buf if self.momentum_buf is not None else jax.tree.map(
+                jnp.zeros_like, self.params
+            )
+            self.params, mom = _server_step(
+                self.params, weighted, wsum, mom,
+                jnp.asarray(self.server_lr, jnp.float32),
+                jnp.asarray(self.algo.server_momentum, jnp.float32),
+                self.algo.server_momentum > 0,
+            )
+            if self.momentum_buf is not None:
+                self.momentum_buf = mom
+
+        if self.algo.uses_cvar and n_total_clients and cvar_deltas:
+            # Scaffold: c ← c + (1/N)·Σ_k (c_k' − c_k)
+            cd = jax.tree.map(lambda *cs: sum(cs), *cvar_deltas)
+            self.c_server = jax.tree.map(
+                lambda c, d: c + d / n_total_clients, self.c_server, cd
+            )
+        return self.params

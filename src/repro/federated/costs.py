@@ -1,0 +1,134 @@
+"""Communication & computation cost meters (paper Appendix D and E).
+
+Exact re-implementation of the paper's cost accounting, parameterized by:
+  b  — feature-extractor parameter count
+  d  — feature dimensionality (c = d·C classifier size)
+  C  — number of classes
+  D  — random-feature count (FED3R-RF)
+  F_phi / F_head — forward FLOPs per image of extractor / classifier head
+  E  — local epochs, n_k — client dataset size, κ — clients per round
+
+All communication figures are in *parameters per client per round*
+(multiply by 4 for FP32 bytes, as the paper does); computation in FLOPs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import numpy as np
+
+FP32_BYTES = 4
+
+
+@dataclass(frozen=True)
+class CostModel:
+    b: float  # extractor params
+    d: int  # feature dim
+    C: int  # classes
+    D: int = 0  # random features (RF variant)
+    F_phi: float = 332.9e6  # MobileNetV2 forward FLOPs / image (paper Table 5)
+    E: int = 5  # local epochs (paper App. C)
+
+    @property
+    def head(self) -> float:
+        return self.d * self.C
+
+    @property
+    def m(self) -> float:  # full model size
+        return self.b + self.head
+
+    @property
+    def F_head(self) -> float:
+        return self.d * self.C
+
+    @property
+    def F_M(self) -> float:
+        return self.F_phi + self.F_head
+
+    # --- communication per sampled client per round (params) ---------------
+
+    def comm_per_client(self, algorithm: str) -> Dict[str, float]:
+        a = algorithm.lower()
+        if a in ("fedavg", "fedavgm"):
+            return {"down": self.m, "up": self.m}
+        if a == "scaffold":
+            return {"down": 2 * self.m, "up": 2 * self.m}
+        if a in ("fedavg-lp", "fedavgm-lp"):
+            return {"down": self.head, "up": self.head}
+        if a == "scaffold-lp":
+            return {"down": 2 * self.head, "up": 2 * self.head}
+        if a == "fed3r":
+            return {"down": 0.0, "up": self.d**2 + self.d * self.C}
+        if a == "fed3r-rf":
+            assert self.D > 0
+            return {"down": 0.0, "up": self.D**2 + self.D * self.C}
+        if a == "fed3r+ft-feat":
+            return {"down": self.b, "up": self.b}
+        raise ValueError(algorithm)
+
+    # --- computation per sampled client per round (FLOPs) ------------------
+
+    def comp_per_client(self, algorithm: str, n_k: float) -> float:
+        a = algorithm.lower()
+        if a in ("fedavg", "fedavgm", "scaffold"):
+            # forward + backward (B ≈ 2F) through the whole model
+            return 3 * self.E * n_k * self.F_M
+        if a in ("fedavg-lp", "fedavgm-lp", "scaffold-lp"):
+            # full forward, backward only through the head
+            return self.E * n_k * (self.F_phi + 3 * self.F_head)
+        if a == "fed3r":
+            # one extractor pass + A_k (symmetric: d(d+1)/2) + b_k (dC)
+            return n_k * (self.F_phi + 0.5 * self.d * (self.d + 1) + self.d * self.C)
+        if a == "fed3r-rf":
+            assert self.D > 0
+            rf_map = self.d * self.D  # Z·Ω
+            return n_k * (
+                self.F_phi + rf_map + 0.5 * self.D * (self.D + 1) + self.D * self.C
+            )
+        if a == "fed3r+ft-feat":
+            return 3 * self.E * n_k * self.F_M
+        raise ValueError(algorithm)
+
+    # --- cumulative curves (paper Fig. 2 middle/right) -----------------------
+
+    def cumulative_comm_bytes(
+        self, algorithm: str, n_rounds: int, clients_per_round: int
+    ) -> np.ndarray:
+        c = self.comm_per_client(algorithm)
+        per_round = (c["down"] + c["up"]) * clients_per_round * FP32_BYTES
+        return per_round * np.arange(1, n_rounds + 1, dtype=np.float64)
+
+    def cumulative_comp_flops_per_client(
+        self,
+        algorithm: str,
+        n_rounds: int,
+        clients_per_round: int,
+        n_clients: int,
+        avg_n_k: float,
+    ) -> np.ndarray:
+        """Average cumulative FLOPs per client: T_t = T · t · κ/K (App. E)."""
+        T = self.comp_per_client(algorithm, avg_n_k)
+        t = np.arange(1, n_rounds + 1, dtype=np.float64)
+        return T * t * clients_per_round / n_clients
+
+    def fed3r_total_comm_bytes(self, n_clients: int, include_extractor_push: bool = False
+                               ) -> float:
+        """FED3R end-to-end: every client uploads its statistics exactly once."""
+        up = (self.d**2 + self.d * self.C) * n_clients
+        down = self.b * n_clients if include_extractor_push else 0.0
+        return (up + down) * FP32_BYTES
+
+
+# Paper-configured instances (Table 4/5): d=1280 (MobileNetV2 features).
+LANDMARKS = CostModel(b=2.22e6, d=1280, C=2028, F_phi=332.9e6)
+INATURALIST = CostModel(b=2.22e6, d=1280, C=1203, F_phi=332.9e6)
+CIFAR100 = CostModel(b=2.22e6, d=1280, C=100, F_phi=332.9e6)
+
+
+def speedup_table(
+    cm: CostModel, target_rounds: Dict[str, float]
+) -> Dict[str, float]:
+    """Rounds-to-target speedups vs FED3R (paper §5.2 reports ×19.3–×82.4)."""
+    base = target_rounds.get("fed3r") or target_rounds.get("fed3r-rf")
+    return {k: v / base for k, v in target_rounds.items()}

@@ -1,0 +1,238 @@
+"""FED3R / FED3R-RF / FedNCM / FED3R+FT round drivers (Algorithm 1 + §4.4).
+
+These run on the simulator level (FederatedDataset of features, or a backbone
+feature extractor).  The datacenter-scale statistics pass is in
+launch/train.py (psum aggregation); both call the same repro.core functions.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import Fed3RConfig, FederatedConfig
+from repro.core import calibration, fed3r, ncm
+from repro.core.random_features import RFFParams, rff_init, rff_map
+from repro.data.pipeline import FederatedDataset
+from repro.federated.sampling import ClientSampler
+from repro.federated.simulator import FLTask, run_federated
+
+
+@dataclass
+class Fed3RHistory:
+    rounds: List[int] = field(default_factory=list)
+    accuracy: List[float] = field(default_factory=list)
+    clients_seen: List[int] = field(default_factory=list)
+    wall_time: List[float] = field(default_factory=list)
+
+
+def _default_extractor(x: np.ndarray) -> jax.Array:
+    return jnp.asarray(x, jnp.float32)
+
+
+def run_fed3r(
+    dataset: FederatedDataset,
+    test_features: jax.Array,
+    test_labels: jax.Array,
+    f3_cfg: Fed3RConfig,
+    fed_cfg: FederatedConfig,
+    *,
+    extractor: Optional[Callable[[np.ndarray], jax.Array]] = None,
+    eval_every: int = 10,
+    rff_params: Optional[RFFParams] = None,
+) -> Tuple[jax.Array, fed3r.Fed3RStats, Fed3RHistory]:
+    """FED3R (Algorithm 1).  Returns (W*, final stats, accuracy history).
+
+    With ``f3_cfg.n_random_features > 0`` this is FED3R-RF: the server draws
+    one shared (Ω, β) and every client maps its features before computing
+    statistics.
+    """
+    extractor = extractor or _default_extractor
+    C = dataset.n_classes
+    d_raw = int(extractor(dataset.features[:1]).shape[-1])
+
+    use_rf = f3_cfg.n_random_features > 0
+    if use_rf and rff_params is None:
+        rff_params = rff_init(
+            jax.random.PRNGKey(fed_cfg.seed + 101), d_raw,
+            f3_cfg.n_random_features, f3_cfg.rff_sigma,
+        )
+    d = f3_cfg.n_random_features if use_rf else d_raw
+
+    def phi(x: np.ndarray) -> jax.Array:
+        z = extractor(x)
+        return rff_map(rff_params, z) if use_rf else z
+
+    test_phi = phi(np.asarray(test_features))
+
+    sampler = ClientSampler(
+        dataset.n_clients, fed_cfg.clients_per_round,
+        replacement=fed_cfg.sample_with_replacement, seed=fed_cfg.seed,
+    )
+    stats = fed3r.init_stats(d, C)
+    client_stats_j = jax.jit(
+        lambda f, y: fed3r.client_stats(f, y, C), static_argnums=()
+    )
+
+    hist = Fed3RHistory()
+    n_rounds = fed_cfg.n_rounds or sampler.rounds_to_full_coverage()
+    seen_once = set()
+    t0 = time.time()
+    for rnd in range(n_rounds):
+        for k in sampler.sample():
+            k = int(k)
+            if not fed_cfg.sample_with_replacement and k in seen_once:
+                continue  # statistics of a client are sent exactly once
+            if fed_cfg.sample_with_replacement and k in seen_once:
+                continue  # resampled client re-sends nothing (idempotent)
+            seen_once.add(k)
+            cd = dataset.client(k)
+            stats = fed3r.merge(stats, client_stats_j(phi(cd.features), jnp.asarray(cd.labels)))
+        if (rnd + 1) % eval_every == 0 or rnd == n_rounds - 1 or len(seen_once) == dataset.n_clients:
+            W = fed3r.solve(stats, f3_cfg.ridge_lambda, f3_cfg.normalize_classifier)
+            acc = float(fed3r.accuracy(W, test_phi, jnp.asarray(test_labels)))
+            hist.rounds.append(rnd + 1)
+            hist.accuracy.append(acc)
+            hist.clients_seen.append(len(seen_once))
+            hist.wall_time.append(time.time() - t0)
+        if len(seen_once) == dataset.n_clients and not fed_cfg.sample_with_replacement:
+            break  # exact convergence after ⌈K/κ⌉ rounds (paper §4.3)
+
+    W = fed3r.solve(stats, f3_cfg.ridge_lambda, f3_cfg.normalize_classifier)
+    return W, stats, hist
+
+
+def run_fedncm(
+    dataset: FederatedDataset,
+    test_features: jax.Array,
+    test_labels: jax.Array,
+    fed_cfg: FederatedConfig,
+    *,
+    extractor: Optional[Callable[[np.ndarray], jax.Array]] = None,
+) -> Tuple[jax.Array, Fed3RHistory]:
+    """FedNCM baseline (Legate et al. 2023a) — Table 1/6 comparison."""
+    extractor = extractor or _default_extractor
+    C = dataset.n_classes
+    d = int(extractor(dataset.features[:1]).shape[-1])
+    stats = ncm.init_stats(d, C)
+    sampler = ClientSampler(dataset.n_clients, fed_cfg.clients_per_round, seed=fed_cfg.seed)
+    hist = Fed3RHistory()
+    for rnd in range(sampler.rounds_to_full_coverage()):
+        for k in sampler.sample():
+            cd = dataset.client(int(k))
+            stats = ncm.merge(stats, ncm.client_stats(extractor(cd.features), jnp.asarray(cd.labels), C))
+    W = ncm.solve(stats)
+    acc = float(ncm.accuracy(W, extractor(np.asarray(test_features)), jnp.asarray(test_labels)))
+    hist.rounds.append(sampler.rounds_to_full_coverage())
+    hist.accuracy.append(acc)
+    return W, hist
+
+
+# ---------------------------------------------------------------------------
+# FED3R + FT (paper §4.4): calibrated softmax init + gradient fine-tuning
+# ---------------------------------------------------------------------------
+
+
+def feature_finetune_task(
+    d: int,
+    n_classes: int,
+    W_init: jax.Array,
+    test_features: jax.Array,
+    test_labels: jax.Array,
+    *,
+    strategy: str = "feat",  # full | lp | feat
+) -> FLTask:
+    """FT task with a trainable feature map M (init = I) + softmax head.
+
+    logits = (x·M)·W + bias — the simulator-scale analogue of fine-tuning
+    the extractor: FT trains (M, W), FT-LP trains W only, FT-FEAT trains M
+    only with the FED3R classifier W kept fixed (the paper's most robust
+    variant in cross-device settings).
+    """
+    params0 = {
+        "M": jnp.eye(d, dtype=jnp.float32),
+        "W": jnp.asarray(W_init, jnp.float32),
+        "bias": jnp.zeros((n_classes,), jnp.float32),
+    }
+
+    def logits_fn(params, x):
+        h = x.astype(jnp.float32) @ params["M"]
+        return h @ params["W"] + params["bias"]
+
+    def per_example_loss(params, batch):
+        logits = logits_fn(params, batch["x"])
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, batch["y"][:, None].astype(jnp.int32), axis=-1
+        )[:, 0]
+        return lse - picked
+
+    tf = jnp.asarray(test_features)
+    tl = jnp.asarray(test_labels)
+
+    @jax.jit
+    def eval_fn(params):
+        return jnp.mean((jnp.argmax(logits_fn(params, tf), -1) == tl).astype(jnp.float32))
+
+    if strategy == "full":
+        freeze = {"M": 1.0, "W": 1.0, "bias": 1.0}
+    elif strategy == "lp":
+        freeze = {"M": 0.0, "W": 1.0, "bias": 1.0}
+    elif strategy == "feat":
+        freeze = {"M": 1.0, "W": 0.0, "bias": 0.0}
+    else:
+        raise ValueError(strategy)
+    return FLTask(params0=params0, per_example_loss=per_example_loss,
+                  freeze=freeze, eval_fn=eval_fn)
+
+
+def run_fed3r_ft(
+    dataset: FederatedDataset,
+    test_features: jax.Array,
+    test_labels: jax.Array,
+    f3_cfg: Fed3RConfig,
+    fed_cfg: FederatedConfig,
+    *,
+    strategy: Optional[str] = None,
+    use_fed3r_init: bool = True,
+    eval_every: int = 10,
+) -> Tuple[Any, Dict[str, Any]]:
+    """Two-stage FED3R+FT (paper §4.4 / Table 2).
+
+    Stage 1: FED3R classifier (skipped if ``use_fed3r_init=False`` — the
+    paper's "✗ init" ablation rows).  Temperature-calibrate the init.
+    Stage 2: federated fine-tuning with the configured algorithm and the
+    requested freeze strategy.
+    """
+    strategy = strategy or f3_cfg.ft_strategy
+    C = dataset.n_classes
+    d = dataset.features.shape[-1]
+
+    info: Dict[str, Any] = {}
+    if use_fed3r_init:
+        W, stats, hist1 = run_fed3r(
+            dataset, test_features, test_labels, f3_cfg, fed_cfg,
+            eval_every=max(1, dataset.n_clients // fed_cfg.clients_per_round),
+        )
+        # calibrate on a subsample of training features (paper App. C)
+        sample = jnp.asarray(dataset.features[: min(4096, len(dataset.labels))], jnp.float32)
+        sample_y = jnp.asarray(dataset.labels[: min(4096, len(dataset.labels))])
+        temp, ces = calibration.calibrate_temperature(fed3r.predict(W, sample), sample_y)
+        W_init = calibration.fold_temperature(W, temp)
+        info["fed3r_history"] = hist1
+        info["temperature"] = float(temp)
+        info["fed3r_rounds"] = hist1.rounds[-1] if hist1.rounds else 0
+    else:
+        W_init = 0.01 * jax.random.normal(jax.random.PRNGKey(fed_cfg.seed), (d, C))
+        info["fed3r_rounds"] = 0
+
+    task = feature_finetune_task(
+        d, C, W_init, test_features, test_labels, strategy=strategy
+    )
+    params, hist2 = run_federated(task, dataset, fed_cfg, eval_every=eval_every)
+    info["ft_history"] = hist2
+    return params, info

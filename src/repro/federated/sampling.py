@@ -1,0 +1,53 @@
+"""Client sampling strategies.
+
+The paper (§4.3, Fig. 3, App. I) distinguishes:
+
+* **without replacement** — FED3R's natural mode: every client is sampled
+  exactly once; convergence is exact after ⌈K/κ⌉ rounds;
+* **with replacement** — classical FL sampling; the paper's worst-case
+  analysis connects rounds-to-coverage to the Batch Coupon Collector problem
+  (Table 7), reproduced in benchmarks/bench_coupon.py.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+
+class ClientSampler:
+    def __init__(
+        self,
+        n_clients: int,
+        per_round: int,
+        *,
+        replacement: bool = False,
+        seed: int = 0,
+    ):
+        self.n_clients = n_clients
+        self.per_round = per_round
+        self.replacement = replacement
+        self.rng = np.random.default_rng(seed)
+        self._pool: List[int] = []
+        self.seen: set = set()
+
+    def sample(self) -> np.ndarray:
+        if self.replacement:
+            out = self.rng.choice(self.n_clients, size=self.per_round, replace=False)
+        else:
+            # epoch-style without replacement: refill+shuffle when exhausted
+            while len(self._pool) < self.per_round:
+                fresh = self.rng.permutation(self.n_clients).tolist()
+                self._pool.extend(fresh)
+            out = np.asarray(self._pool[: self.per_round])
+            self._pool = self._pool[self.per_round :]
+        self.seen.update(int(c) for c in out)
+        return out
+
+    @property
+    def coverage(self) -> float:
+        return len(self.seen) / self.n_clients
+
+    def rounds_to_full_coverage(self) -> int:
+        """⌈K/κ⌉ — FED3R's exact convergence horizon (no replacement)."""
+        return -(-self.n_clients // self.per_round)

@@ -1,0 +1,61 @@
+"""Secure aggregation of FED3R statistics (paper Appendix B).
+
+The paper notes that the server only ever needs the SUM of the clients'
+(A_k, b_k), so Bonawitz et al.'s Secure Aggregation applies directly.  This
+module implements the *masking algebra* of that protocol exactly (pairwise
+additive masks that cancel in the aggregate), without the key-agreement
+crypto (out of scope offline; the mask generation hook is where X25519-based
+PRG seeds would plug in):
+
+    client u sends  y_u = x_u + Σ_{v>u} m_{uv} − Σ_{v<u} m_{vu}
+    Σ_u y_u = Σ_u x_u            (every mask appears with both signs)
+
+Individual uploads are fully masked (marginally uniform given unknown
+masks); the server learns nothing but the sum.  The psum/merge aggregation
+paths accept masked statistics unchanged — demonstrating the paper's claim
+that FED3R composes with secure aggregation *by construction*.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fed3r import Fed3RStats
+
+
+def _pair_mask(seed: int, u: int, v: int, like: Fed3RStats) -> Fed3RStats:
+    """Deterministic pairwise mask m_{uv} (u < v) with x_u-shaped leaves."""
+    key = jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(seed), u), v)
+    leaves, treedef = jax.tree.flatten(like)
+    keys = jax.random.split(key, len(leaves))
+    masked = [
+        jax.random.normal(k, l.shape, jnp.float32) * 10.0 for k, l in zip(keys, leaves)
+    ]
+    return jax.tree.unflatten(treedef, masked)
+
+
+def mask_statistics(
+    stats: Fed3RStats, client_id: int, cohort: Sequence[int], seed: int
+) -> Fed3RStats:
+    """Apply the pairwise masking a client performs before upload."""
+    out = stats
+    for v in cohort:
+        if v == client_id:
+            continue
+        u, w = sorted((client_id, v))
+        m = _pair_mask(seed, u, w, stats)
+        sign = 1.0 if client_id == u else -1.0
+        out = jax.tree.map(lambda a, b: a + sign * b, out, m)
+    return out
+
+
+def secure_aggregate(
+    masked: List[Fed3RStats],
+) -> Fed3RStats:
+    """Server-side sum of masked uploads — masks cancel exactly."""
+    total = masked[0]
+    for s in masked[1:]:
+        total = jax.tree.map(lambda a, b: a + b, total, s)
+    return total

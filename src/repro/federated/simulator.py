@@ -1,0 +1,180 @@
+"""Federated round-loop simulator.
+
+Runs any :mod:`repro.federated.algorithms` algorithm over a
+:class:`repro.data.pipeline.FederatedDataset`.  Client data is padded to a
+global (n_batches, batch_size) shape so one jitted ``local_update`` serves
+every client without retracing.  Designed for CPU-scale experiments
+(linear heads or reduced backbones); the datacenter path lives in
+launch/train.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FederatedConfig
+from repro.data.pipeline import FederatedDataset
+from repro.federated.algorithms import Server, make_algorithm, make_local_update
+from repro.federated.sampling import ClientSampler
+
+
+class FLTask(NamedTuple):
+    """A federated optimization problem.
+
+    ``per_example_loss(params, batch) -> (batch_size,)`` losses;
+    ``batch`` = {"x": ..., "y": ..., "mask": ...}.
+    ``freeze``: pytree of {1.0: trainable, 0.0: frozen} matching params.
+    """
+
+    params0: Any
+    per_example_loss: Callable[[Any, Dict[str, jax.Array]], jax.Array]
+    freeze: Any
+    eval_fn: Optional[Callable[[Any], float]] = None
+
+
+@dataclass
+class FLHistory:
+    rounds: List[int] = field(default_factory=list)
+    accuracy: List[float] = field(default_factory=list)
+    coverage: List[float] = field(default_factory=list)
+    wall_time: List[float] = field(default_factory=list)
+
+    def as_dict(self) -> Dict[str, list]:
+        return {
+            "rounds": self.rounds,
+            "accuracy": self.accuracy,
+            "coverage": self.coverage,
+            "wall_time": self.wall_time,
+        }
+
+
+def _pad_client_batches(
+    x: np.ndarray, y: np.ndarray, batch_size: int, n_batches: int, epochs: int,
+    rng: np.random.Generator,
+) -> Dict[str, np.ndarray]:
+    """Pad one client's data to (epochs*n_batches, batch_size, ...)."""
+    total = n_batches * batch_size
+    xs, ys, ms = [], [], []
+    for _ in range(epochs):
+        order = rng.permutation(len(y))
+        xe = np.zeros((total,) + x.shape[1:], x.dtype)
+        ye = np.zeros((total,), y.dtype)
+        me = np.zeros((total,), np.float32)
+        k = min(len(y), total)
+        xe[:k] = x[order[:k]]
+        ye[:k] = y[order[:k]]
+        me[:k] = 1.0
+        xs.append(xe.reshape(n_batches, batch_size, *x.shape[1:]))
+        ys.append(ye.reshape(n_batches, batch_size))
+        ms.append(me.reshape(n_batches, batch_size))
+    return {
+        "x": np.concatenate(xs, 0),
+        "y": np.concatenate(ys, 0),
+        "mask": np.concatenate(ms, 0),
+    }
+
+
+def run_federated(
+    task: FLTask,
+    dataset: FederatedDataset,
+    cfg: FederatedConfig,
+    *,
+    eval_every: int = 10,
+    verbose: bool = False,
+) -> tuple:
+    """Run cfg.n_rounds of federated training. Returns (params, FLHistory)."""
+    algo = make_algorithm(
+        cfg.algorithm, prox_mu=cfg.prox_mu, server_momentum=cfg.server_momentum
+    )
+    local_update = make_local_update(
+        task.per_example_loss, algo, lr=cfg.client_lr,
+        weight_decay=cfg.client_weight_decay,
+    )
+    server = Server(algo, task.params0, server_lr=cfg.server_lr)
+    sampler = ClientSampler(
+        dataset.n_clients, cfg.clients_per_round,
+        replacement=cfg.sample_with_replacement, seed=cfg.seed,
+    )
+
+    max_nk = int(dataset.client_sizes().max())
+    n_batches = -(-max_nk // cfg.local_batch_size)
+    np_rng = np.random.default_rng(cfg.seed + 7)
+
+    zeros_like_params = jax.tree.map(jnp.zeros_like, task.params0)
+    cvars: Dict[int, Any] = {}
+
+    hist = FLHistory()
+    t0 = time.time()
+    for rnd in range(cfg.n_rounds):
+        chosen = sampler.sample()
+        results, cvar_deltas = [], []
+        for k in chosen:
+            cd = dataset.client(int(k))
+            batches = _pad_client_batches(
+                cd.features, cd.labels, cfg.local_batch_size, n_batches,
+                cfg.local_epochs, np_rng,
+            )
+            batches = {kk: jnp.asarray(v) for kk, v in batches.items()}
+            c_client = cvars.get(int(k), zeros_like_params) if algo.uses_cvar else zeros_like_params
+            c_server = server.c_server if algo.uses_cvar else zeros_like_params
+            res = local_update(server.params, batches, task.freeze, c_server, c_client)
+            results.append(res)
+            if algo.uses_cvar:
+                cvar_deltas.append(
+                    jax.tree.map(lambda n, o: n - o, res.new_cvar, c_client)
+                )
+                cvars[int(k)] = res.new_cvar
+        server.aggregate(results, n_total_clients=dataset.n_clients,
+                         cvar_deltas=cvar_deltas or None)
+
+        if task.eval_fn is not None and ((rnd + 1) % eval_every == 0 or rnd == cfg.n_rounds - 1):
+            acc = float(task.eval_fn(server.params))
+            hist.rounds.append(rnd + 1)
+            hist.accuracy.append(acc)
+            hist.coverage.append(sampler.coverage)
+            hist.wall_time.append(time.time() - t0)
+            if verbose:
+                print(f"round {rnd+1:5d}  acc={acc:.4f}  coverage={sampler.coverage:.2f}")
+    return server.params, hist
+
+
+# ---------------------------------------------------------------------------
+# linear softmax-head task over fixed features (LP baselines of the paper)
+# ---------------------------------------------------------------------------
+
+
+def linear_head_task(
+    d: int,
+    n_classes: int,
+    test_features: jax.Array,
+    test_labels: jax.Array,
+    *,
+    W_init: Optional[jax.Array] = None,
+    rng: Optional[jax.Array] = None,
+) -> FLTask:
+    """FedAvg-LP etc.: train only a linear softmax head on frozen features."""
+    if W_init is None:
+        key = rng if rng is not None else jax.random.PRNGKey(0)
+        W_init = 0.01 * jax.random.normal(key, (d, n_classes), jnp.float32)
+    params0 = {"W": jnp.asarray(W_init, jnp.float32),
+               "bias": jnp.zeros((n_classes,), jnp.float32)}
+
+    def per_example_loss(params, batch):
+        logits = batch["x"].astype(jnp.float32) @ params["W"] + params["bias"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, batch["y"][:, None].astype(jnp.int32), axis=-1)[:, 0]
+        return lse - picked
+
+    @jax.jit
+    def eval_fn(params):
+        logits = test_features.astype(jnp.float32) @ params["W"] + params["bias"]
+        return jnp.mean((jnp.argmax(logits, -1) == test_labels).astype(jnp.float32))
+
+    freeze = jax.tree.map(lambda _: 1.0, params0)
+    return FLTask(params0=params0, per_example_loss=per_example_loss,
+                  freeze=freeze, eval_fn=eval_fn)

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Three kernels, each with a pure-jnp oracle in ref.py and a jit'd public
+wrapper in ops.py:
+
+  * fed3r_stats     — the paper's client-side hot spot: fused A += ZᵀZ,
+                      b += ZᵀY accumulation (one blocked GEMM over [Z|Y]).
+  * rff             — fused random-features map √(2/D)·cos(ZΩ + β).
+  * flash_attention — online-softmax causal GQA attention (prefill path),
+                      with sliding-window masking.
+
+All kernels use explicit BlockSpec VMEM tiling with 128-aligned MXU tile
+shapes; on this CPU container they are validated in interpret mode
+(pl.pallas_call(..., interpret=True) executes the kernel body on CPU).
+"""
+from repro.kernels.ops import (  # noqa: F401
+    fed3r_stats,
+    flash_attention,
+    rff_transform,
+)

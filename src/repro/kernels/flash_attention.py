@@ -1,0 +1,132 @@
+"""Pallas kernel: online-softmax causal GQA flash attention (prefill path).
+
+Standard two-pass-free flash attention: for each query tile, sweep key tiles
+keeping the running max m, normalizer l, and output accumulator in VMEM
+scratch; rescale on every new tile.  The (S × S) score matrix never exists
+in HBM — the XLA fallback path needs O(B·H·chunk·S) for it.
+
+GQA: query head h reads kv head h // (H/KV); the wrapper folds (B, H) into
+the grid's first axis and maps kv blocks through the group index.
+Sliding-window masking shares the position rule used across the framework:
+keys with  q_pos − window < k_pos ≤ q_pos.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 128  # query rows per tile
+BK = 128  # key cols per tile
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: Optional[int], n_k_steps: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # skip key tiles strictly in the causal future of the whole query tile
+    run = jnp.logical_or(not causal, ki * BK <= qi * BQ + BQ - 1)
+    if window is not None:
+        # ... and tiles entirely before every query's window start
+        run = jnp.logical_and(run, (ki + 1) * BK - 1 > qi * BQ - window)
+
+    @pl.when(run)
+    def _update():
+        q = q_ref[0]  # (BQ, hd)
+        k = k_ref[0]  # (BK, hd)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (BQ, BK)
+
+        q_pos = qi * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+        k_pos = ki * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+        valid = jnp.ones((BQ, BK), bool)
+        if causal:
+            valid &= k_pos <= q_pos
+        if window is not None:
+            valid &= k_pos > q_pos - window
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)  # (BQ,)
+        p = jnp.exp(s - m_new[:, None])  # (BQ, BK) fp32
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k_steps - 1)
+    def _done():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "interpret")
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, S, KV, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    assert S % BQ == 0 and S % BK == 0, f"seq {S} must divide tiles ({BQ},{BK})"
+
+    # fold (B, H) into one grid axis; layout (BH, S, hd)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        b = bh // H
+        h = bh % H
+        return (b * KV + h // G, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=hd ** -0.5, causal=causal, window=window,
+            n_k_steps=S // BK,
+        ),
+        grid=(B * H, S // BQ, S // BK),
+        in_specs=[
+            pl.BlockSpec((1, BQ, hd), q_map),
+            pl.BlockSpec((1, BK, hd), kv_map),
+            pl.BlockSpec((1, BK, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BQ,), jnp.float32),
+            pltpu.VMEM((BQ,), jnp.float32),
+            pltpu.VMEM((BQ, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,39 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each wrapper dispatches: TPU → compiled Pallas kernel; anything else →
+interpret mode (the kernel body executed on CPU — used for validation in
+this container) — the pure-jnp oracles live in ref.py.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels.fed3r_stats import fed3r_stats_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rff import rff_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fed3r_stats(Z: jax.Array, Y: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Fused FED3R statistics (A, b) = (ZᵀZ, ZᵀY)."""
+    return fed3r_stats_pallas(Z, Y, interpret=_interpret())
+
+
+def rff_transform(Z: jax.Array, omega: jax.Array, beta: jax.Array) -> jax.Array:
+    """Fused random-features map √(2/D)·cos(ZΩ + β)."""
+    return rff_pallas(Z, omega, beta, interpret=_interpret())
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, window: Optional[int] = None,
+) -> jax.Array:
+    """Online-softmax GQA attention (prefill)."""
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, interpret=_interpret()
+    )

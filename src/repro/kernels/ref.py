@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def fed3r_stats_ref(Z: jax.Array, Y: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """A = ZᵀZ, b = ZᵀY in fp32. Z: (n, d); Y: (n, C) one-hot/targets."""
+    Zf = Z.astype(jnp.float32)
+    return Zf.T @ Zf, Zf.T @ Y.astype(jnp.float32)
+
+
+def rff_ref(Z: jax.Array, omega: jax.Array, beta: jax.Array) -> jax.Array:
+    """√(2/D)·cos(ZΩ + β) in fp32. Z: (n, d); Ω: (d, D); β: (D,)."""
+    D = omega.shape[1]
+    proj = Z.astype(jnp.float32) @ omega.astype(jnp.float32) + beta
+    return jnp.sqrt(2.0 / D) * jnp.cos(proj)
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, S, KV, hd)
+    v: jax.Array,  # (B, S, KV, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Masked softmax attention oracle (fp32 softmax), GQA-aware."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k) * (hd ** -0.5)
+    scores = scores.astype(jnp.float32)
+    pos = jnp.arange(S)
+    valid = jnp.ones((S, S), bool)
+    if causal:
+        valid &= pos[None, :] <= pos[:, None]
+    if window is not None:
+        valid &= pos[None, :] > pos[:, None] - window
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, S, H, hd)

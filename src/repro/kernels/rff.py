@@ -1,0 +1,70 @@
+"""Pallas kernel: fused random-features map ψ(Z) = √(2/D)·cos(ZΩ + β).
+
+FED3R-RF maps features through D ∈ {5k, 10k} random features before the
+statistics pass.  Unfused, the (n × D) pre-activation ZΩ round-trips HBM
+between the GEMM and the cos — at D=10k that is 40 MB per 1k samples.  The
+kernel keeps the GEMM accumulator tile in VMEM and applies bias + cos + scale
+in-register before the single writeback.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BM = 128  # sample rows per tile
+BN = 128  # feature cols per tile
+BK = 512  # d contraction step
+
+
+def _rff_kernel(z_ref, om_ref, beta_ref, out_ref, acc_ref, *, n_k_steps: int, d_total: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        z_ref[...], om_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k_steps - 1)
+    def _done():
+        coef = jnp.sqrt(2.0 / d_total)
+        out_ref[...] = coef * jnp.cos(acc_ref[...] + beta_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rff_pallas(
+    Z: jax.Array, omega: jax.Array, beta: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    """ψ(Z): (n, d) -> (n, D) fp32."""
+    n, d = Z.shape
+    D = omega.shape[1]
+
+    pad_n = (-n) % BM
+    pad_d = (-d) % BK
+    pad_D = (-D) % BN
+    Zp = jnp.pad(Z, ((0, pad_n), (0, pad_d)))
+    Op = jnp.pad(omega, ((0, pad_d), (0, pad_D)))
+    Bp = jnp.pad(beta, ((0, pad_D),))[None, :]  # (1, Dp) for block tiling
+
+    n_k = Zp.shape[1] // BK
+    out = pl.pallas_call(
+        functools.partial(_rff_kernel, n_k_steps=n_k, d_total=D),
+        grid=(Zp.shape[0] // BM, Op.shape[1] // BN, n_k),
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BK, BN), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, BN), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Zp.shape[0], Op.shape[1]), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
+        interpret=interpret,
+    )(Zp, Op, Bp)
+    return out[:n, :D]

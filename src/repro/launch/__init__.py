@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, sharding, step functions, dry-run, drivers."""

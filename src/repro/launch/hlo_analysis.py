@@ -1,0 +1,217 @@
+"""Post-SPMD HLO analysis: collective bytes, op census, roofline terms.
+
+``collective_stats`` parses the compiled (partitioned) HLO text and sums, per
+collective kind, the *wire bytes per chip* using standard ring-algorithm
+factors:
+
+    all-reduce        2·(n−1)/n · buffer
+    all-gather        (n−1)/n · result        (result = gathered buffer)
+    reduce-scatter    (n−1)   · result        (operand = n·result)
+    all-to-all        (n−1)/n · buffer
+    collective-permute  1 · buffer
+
+where n is the replica-group size parsed from the op.
+
+NOTE on loops: ``cost_analysis`` and a single text parse both count a
+while-loop (scan) body exactly once.  The dry-run therefore derives
+whole-program totals by the **delta method**: compile unrolled 1-layer and
+2-layer variants, take the difference as the exact per-layer cost, and
+extrapolate — see launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+# iota format: replica_groups=[8,64]<=[512] → 8 groups of 64
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+# explicit format: replica_groups={{0,1,2,3},{...}}
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _all_shapes_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        nbytes = _DTYPE_BYTES.get(dt)
+        if nbytes is None:
+            continue  # layout annotations like {1,0} don't match dtype names
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # collective-permute / unknown: factor-1 wire anyway
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    buffer_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    def scaled(self, factor: float) -> "CollectiveStats":
+        out = CollectiveStats()
+        for k in self.counts:
+            out.counts[k] = int(self.counts[k] * factor)
+            out.buffer_bytes[k] = self.buffer_bytes[k] * factor
+            out.wire_bytes[k] = self.wire_bytes[k] * factor
+        return out
+
+    def minus(self, other: "CollectiveStats") -> "CollectiveStats":
+        out = CollectiveStats()
+        keys = set(self.counts) | set(other.counts)
+        for k in keys:
+            out.counts[k] = self.counts.get(k, 0) - other.counts.get(k, 0)
+            out.buffer_bytes[k] = self.buffer_bytes.get(k, 0.0) - other.buffer_bytes.get(k, 0.0)
+            out.wire_bytes[k] = self.wire_bytes.get(k, 0.0) - other.wire_bytes.get(k, 0.0)
+        return out
+
+    def plus_scaled(self, other: "CollectiveStats", factor: float) -> "CollectiveStats":
+        # clamped at zero: layout differences between depth variants can give
+        # slightly negative per-layer deltas for rare collective kinds
+        out = CollectiveStats()
+        keys = set(self.counts) | set(other.counts)
+        for k in keys:
+            out.counts[k] = max(
+                int(self.counts.get(k, 0) + factor * other.counts.get(k, 0)), 0
+            )
+            out.buffer_bytes[k] = max(
+                self.buffer_bytes.get(k, 0.0) + factor * other.buffer_bytes.get(k, 0.0), 0.0
+            )
+            out.wire_bytes[k] = max(
+                self.wire_bytes.get(k, 0.0) + factor * other.wire_bytes.get(k, 0.0), 0.0
+            )
+        return out
+
+    def summary(self) -> str:
+        lines = []
+        for k in sorted(self.counts):
+            lines.append(
+                f"{k:20s} n={self.counts[k]:4d} buffer={self.buffer_bytes[k]/1e6:10.1f}MB"
+                f" wire={self.wire_bytes[k]/1e6:10.1f}MB"
+            )
+        lines.append(f"{'TOTAL':20s} wire={self.total_wire_bytes/1e6:10.1f}MB")
+        return "\n".join(lines)
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Parse partitioned HLO; sums per-chip wire bytes per collective kind."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if " = " not in line:
+            continue
+        rest = line.split(" = ", 1)[1]
+        # cut metadata/backend config tails to avoid false matches
+        rest = rest.split(", metadata=")[0]
+        for kind in _COLLECTIVES:
+            pos = rest.find(kind + "(")
+            if pos < 0:
+                pos = rest.find(kind + "-start(")
+            if pos <= 0:
+                continue
+            # require the match to be the op name: preceded by whitespace
+            if rest[pos - 1] not in (" ", "\t"):
+                continue
+            type_part = rest[:pos]
+            buf = _all_shapes_bytes(type_part)
+            n = _group_size(line)
+            if kind == "all-reduce":
+                wire = 2.0 * (n - 1) / max(n, 1) * buf
+            elif kind == "all-gather":
+                wire = (n - 1) / max(n, 1) * buf
+            elif kind == "reduce-scatter":
+                wire = float(n - 1) * buf
+            elif kind == "all-to-all":
+                wire = (n - 1) / max(n, 1) * buf
+            else:  # collective-permute
+                wire = float(buf)
+            stats.counts[kind] += 1
+            stats.buffer_bytes[kind] += buf
+            stats.wire_bytes[kind] += wire
+            break
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_global: float
+    hlo_bytes_global: float
+    collective_wire_bytes_per_chip: float
+    n_chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    wire_bytes_per_device: float,
+    n_chips: int,
+    *,
+    peak_flops: float,
+    hbm_bw: float,
+    ici_bw: float,
+) -> RooflineTerms:
+    """Three-term roofline (§Roofline contract).
+
+    compute   = HLO_FLOPs / (chips × peak)   [= flops_pd / peak]
+    memory    = HLO_bytes / (chips × HBM_bw) [= bytes_pd / bw]
+    collective= wire_bytes_pd / link_bw
+    """
+    return RooflineTerms(
+        compute_s=flops_per_device / peak_flops,
+        memory_s=bytes_per_device / hbm_bw,
+        collective_s=wire_bytes_per_device / ici_bw,
+        hlo_flops_global=flops_per_device * n_chips,
+        hlo_bytes_global=bytes_per_device * n_chips,
+        collective_wire_bytes_per_chip=wire_bytes_per_device,
+        n_chips=n_chips,
+    )

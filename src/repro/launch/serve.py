@@ -1,0 +1,79 @@
+"""Serving driver: batched prefill + autoregressive decode on a mesh.
+
+Demonstrates the inference path of every architecture family, including
+ring-buffer KV caches, SSM/RG-LRU state decode and sliding windows.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b-smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+
+
+def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
+          greedy: bool = True, verbose: bool = True) -> jax.Array:
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+
+    prompts = jax.random.randint(rng, (batch, prompt_len), 0, cfg.vocab_size)
+    fed = {"tokens": prompts}
+    if cfg.arch_type == "vlm":
+        fed["patch_embeds"] = 0.1 * jax.random.normal(
+            rng, (batch, cfg.n_patches, cfg.d_model)
+        )
+    if cfg.arch_type == "audio":
+        fed["audio_frames"] = 0.1 * jax.random.normal(
+            rng, (batch, cfg.n_audio_frames, cfg.d_model)
+        )
+    off = cfg.n_patches if cfg.arch_type == "vlm" else 0
+
+    t0 = time.time()
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_capacity=off + prompt_len + gen))
+    logits, cache = prefill(params, fed)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    decode = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(gen - 1):
+        logits, cache = decode(params, cache, tok, jnp.int32(off + prompt_len + i))
+        tok = (jnp.argmax(logits, -1) if greedy
+               else jax.random.categorical(jax.random.fold_in(rng, i), logits)
+               )[:, None].astype(jnp.int32)
+        out.append(tok)
+    toks = jnp.concatenate(out, axis=1)
+    jax.block_until_ready(toks)
+    t_decode = time.time() - t0
+    if verbose:
+        print(f"[{arch}] prefill({batch}x{prompt_len}): {t_prefill*1e3:.1f}ms  "
+              f"decode {gen-1} steps: {t_decode*1e3:.1f}ms "
+              f"({(gen-1)*batch/max(t_decode,1e-9):.1f} tok/s)")
+        print("generated:", toks[0].tolist())
+    return toks
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b-smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    serve(args.arch, args.batch, args.prompt_len, args.gen)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""ShapeDtypeStruct input specs for every (architecture × input shape).
+
+``input_specs(cfg, shape)`` returns abstract stand-ins (no device allocation)
+for the step function that the shape's kind lowers:
+
+  train_4k     -> train_step   {tokens, labels [, patch_embeds | audio_frames]}
+  prefill_32k  -> prefill_step {tokens [, patch_embeds | audio_frames]}
+  decode_32k   -> decode_step  {token, pos, cache}
+  long_500k    -> decode_step  (sub-quadratic archs; dense archs use the
+                                sliding-window variant — see variant_for)
+
+For VLM the text length is ``seq_len − n_patches`` so the total processed
+sequence equals the assigned seq_len exactly; for audio the encoder frames
+are the stub frontend's output (B, 1500, d) and seq_len applies to the
+decoder tokens.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.models import model as model_lib
+
+SDS = jax.ShapeDtypeStruct
+
+# Sliding-window width used for the long_500k variant of full-attention archs.
+LONG_CONTEXT_WINDOW = 8192
+
+# Archs that cannot run long_500k at all (full-attn enc-dec decoder; the
+# cross-attention source is fixed 1500 frames and a 500k autoregressive
+# transcript has no modeling meaning). Recorded as a skip in DESIGN.md.
+LONG_500K_SKIPS = ("whisper-large-v3",)
+
+# Archs that are natively sub-quadratic (no variant needed for long_500k).
+NATIVE_SUBQUADRATIC = ("mamba2-1.3b", "recurrentgemma-9b")
+
+
+def variant_for(cfg: ModelConfig, shape: ShapeConfig) -> Optional[ModelConfig]:
+    """Config actually lowered for (arch, shape); None => skip (documented)."""
+    if shape.name != "long_500k":
+        return cfg
+    if cfg.name in LONG_500K_SKIPS:
+        return None
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return cfg  # natively sub-quadratic decode
+    # dense/moe/vlm: sliding-window variant (ring-buffer KV cache)
+    return cfg.replace(sliding_window=LONG_CONTEXT_WINDOW)
+
+
+def _tok(b: int, s: int) -> SDS:
+    return SDS((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract inputs for the step lowered by ``shape.kind``."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    if shape.kind == "train":
+        specs: Dict[str, Any] = {}
+        if cfg.arch_type == "vlm":
+            s_text = S - cfg.n_patches
+            specs["tokens"] = _tok(B, s_text)
+            specs["labels"] = _tok(B, s_text)
+            specs["patch_embeds"] = SDS((B, cfg.n_patches, cfg.d_model), dt)
+        elif cfg.arch_type == "audio":
+            specs["tokens"] = _tok(B, S)
+            specs["labels"] = _tok(B, S)
+            specs["audio_frames"] = SDS((B, cfg.n_audio_frames, cfg.d_model), dt)
+        else:
+            specs["tokens"] = _tok(B, S)
+            specs["labels"] = _tok(B, S)
+        return {"batch": specs}
+
+    if shape.kind == "prefill":
+        specs = {}
+        if cfg.arch_type == "vlm":
+            specs["tokens"] = _tok(B, S - cfg.n_patches)
+            specs["patch_embeds"] = SDS((B, cfg.n_patches, cfg.d_model), dt)
+        elif cfg.arch_type == "audio":
+            specs["tokens"] = _tok(B, S)
+            specs["audio_frames"] = SDS((B, cfg.n_audio_frames, cfg.d_model), dt)
+        else:
+            specs["tokens"] = _tok(B, S)
+        return {"batch": specs}
+
+    if shape.kind == "decode":
+        cache = jax.eval_shape(lambda: model_lib.make_cache(cfg, B, S))
+        return {
+            "cache": cache,
+            "token": _tok(B, 1),
+            "pos": SDS((), jnp.int32),
+        }
+
+    raise ValueError(shape.kind)
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct pytree of the full model parameters (no allocation)."""
+    return jax.eval_shape(lambda: model_lib.init_params(cfg, jax.random.PRNGKey(0)))

@@ -1,0 +1,128 @@
+"""Step functions lowered onto the production mesh.
+
+* ``train_step`` — one FL local SGD step (fwd + bwd + parameter update);
+  the FT-phase workhorse.  Frozen-subtree masks (FT-LP / FT-FEAT) multiply
+  gradients by a 0/1 pytree.
+* ``prefill_step`` — forward + KV/state cache construction.
+* ``decode_step`` — one token against the cache.
+* ``fed3r_stats_step`` — the paper's statistics pass: backbone features →
+  (A, b) accumulation.  Batch is sharded over the data axes, so the ZᵀZ
+  contraction makes GSPMD emit exactly the hierarchical all-reduce that
+  implements the paper's client→server aggregation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import fed3r
+from repro.core.random_features import RFFParams, rff_map
+from repro.models import model as model_lib
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    lr: float = 1e-2,
+    freeze: Optional[Any] = None,
+    num_microbatches: int = 1,
+    param_specs: Optional[Any] = None,
+) -> Callable:
+    """FL local SGD step with gradient accumulation and mixed precision.
+
+    * ``num_microbatches`` splits the per-step batch into M sequential
+      microbatches (lax.scan) — activation/remat memory scales 1/M while the
+      SGD update stays mathematically identical (mean of microbatch grads).
+    * Mixed precision: the fp32 master params are cast ONCE per step to a
+      bf16 compute copy, constrained to the same (FSDP) sharding via
+      ``param_specs`` — so every per-layer weight all-gather inside the scan
+      moves bf16, not fp32 (2× collective wire; see EXPERIMENTS.md §Perf H2).
+      Gradients are taken w.r.t. the bf16 copy (cotangent collectives also
+      bf16) and applied to the fp32 master.
+    """
+
+    def to_bf16(params):
+        pc = jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p,
+            params,
+        )
+        if param_specs is not None:
+            pc = jax.lax.with_sharding_constraint(pc, param_specs)
+        return pc
+
+    def grads_of(pc, batch):
+        return jax.value_and_grad(
+            lambda pp, b: model_lib.lm_loss(cfg, pp, b)
+        )(pc, batch)
+
+    def train_step(params, batch):
+        pc = to_bf16(params)
+        if num_microbatches <= 1:
+            loss, grads = grads_of(pc, batch)
+        else:
+            M = num_microbatches
+
+            def split(a):
+                assert a.shape[0] % M == 0, (a.shape, M)
+                return a.reshape((M, a.shape[0] // M) + a.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+            gz = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), pc)
+
+            def body(acc, microbatch):
+                loss, g = grads_of(pc, microbatch)
+                return jax.tree.map(lambda a, x: (a + x).astype(a.dtype), acc, g), loss
+
+            gsum, losses = jax.lax.scan(body, gz, mb)
+            grads = jax.tree.map(lambda g: g / M, gsum)
+            loss = jnp.mean(losses)
+        if freeze is not None:
+            grads = jax.tree.map(lambda g, f: g * f, grads, freeze)
+        params = jax.tree.map(
+            lambda p, g: (p - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads,
+        )
+        return params, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_capacity: int) -> Callable:
+    def prefill_step(params, batch):
+        return model_lib.prefill(cfg, params, batch, cache_capacity)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, cache, token, pos):
+        return model_lib.decode_step(cfg, params, cache, token, pos)
+
+    return decode_step
+
+
+def make_fed3r_stats_step(
+    cfg: ModelConfig,
+    n_classes: int,
+    rff_params: Optional[RFFParams] = None,
+) -> Callable:
+    """(params, stats, batch{tokens..., class_labels}) -> stats'.
+
+    One statistics mini-round: extract φ over the (data-sharded) batch,
+    optionally map through shared random features, accumulate A/b.  The
+    contraction over the batch dim is the paper's exact aggregation — GSPMD
+    lowers it to an all-reduce over ("pod", "data").
+    """
+
+    def stats_step(params, stats: fed3r.Fed3RStats, batch) -> fed3r.Fed3RStats:
+        feats = model_lib.extract_features(cfg, params, batch)
+        if rff_params is not None:
+            feats = rff_map(rff_params, feats)
+        new = fed3r.client_stats(feats, batch["class_labels"], n_classes)
+        return fed3r.merge(stats, new)
+
+    return stats_step

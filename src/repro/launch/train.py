@@ -1,0 +1,171 @@
+"""Federated training driver on a jax mesh (the datacenter path).
+
+Phase 1 (FED3R, Algorithm 1): statistics pass over client-sharded batches —
+the ZᵀZ/ZᵀY contraction over the data axis IS the server aggregation
+(all-reduce).  Solve → temperature-calibrate → install the classifier.
+
+Phase 2 (FED3R+FT, §4.4): federated fine-tuning rounds with ``train_step``
+(FedAvg-style local steps; freeze mask per FT strategy).
+
+On this CPU container the driver runs reduced configs on the host mesh;
+on TPU the same code takes ``--mesh pod|multipod``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch fed3r-mnv2-proxy-smoke \
+      --rounds 30 --ft-strategy feat
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_pytree
+from repro.configs import get_config
+from repro.core import calibration, fed3r
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_token_dataset
+from repro.launch.mesh import data_axes, make_host_mesh
+from repro.launch.steps import make_fed3r_stats_step, make_train_step
+from repro.models import build_model
+
+
+def run(
+    arch: str,
+    *,
+    n_classes: int = 16,
+    n_clients: int = 40,
+    clients_per_round: int = 8,
+    rounds: int = 30,
+    seq_len: int = 32,
+    n_samples: int = 2048,
+    lr: float = 0.05,
+    ft_strategy: str = "feat",
+    use_fed3r_init: bool = True,
+    ckpt_dir: Optional[str] = None,
+    verbose: bool = True,
+) -> dict:
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    jax.set_mesh(mesh)
+
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    ds = make_token_dataset(jax.random.PRNGKey(1), n_samples, seq_len,
+                            cfg.vocab_size, n_classes)
+    parts = dirichlet_partition(
+        np.random.default_rng(2), np.asarray(ds.labels), n_clients, alpha=0.0
+    )
+    n_test = n_samples // 5
+    test_tokens, test_labels = ds.tokens[:n_test], ds.labels[:n_test]
+
+    log = {"fed3r_acc": None, "ft_acc": [], "rounds": []}
+
+    # ---- phase 1: FED3R statistics pass -------------------------------------
+    W_head = None
+    if use_fed3r_init:
+        t0 = time.time()
+        stats_step = jax.jit(make_fed3r_stats_step(cfg, n_classes))
+        stats = fed3r.init_stats(cfg.d_feat, n_classes)
+        for k in range(n_clients):  # every client contributes exactly once
+            idx = parts[k]
+            batch = {"tokens": ds.tokens[idx], "class_labels": ds.labels[idx]}
+            stats = stats_step(params, stats, batch)
+        W = fed3r.solve(stats, 0.01)
+        feats_test = model.extract_features(params, {"tokens": test_tokens})
+        acc = float(fed3r.accuracy(W, feats_test, test_labels))
+        scores = fed3r.predict(W, model.extract_features(params, {"tokens": ds.tokens[n_test:n_test+512]}))
+        temp, _ = calibration.calibrate_temperature(scores, ds.labels[n_test:n_test+512])
+        W_head = calibration.fold_temperature(W, temp)
+        log["fed3r_acc"] = acc
+        if verbose:
+            print(f"[fed3r] classifier in {n_clients} client visits "
+                  f"({time.time()-t0:.1f}s)  acc={acc:.4f}  T={float(temp):.2f}")
+
+    # ---- phase 2: federated fine-tuning --------------------------------------
+    head = {"W": W_head if W_head is not None
+            else 0.01 * jax.random.normal(rng, (cfg.d_feat, n_classes)),
+            "b": jnp.zeros((n_classes,), jnp.float32)}
+    full = {"backbone": params, "head": head}
+
+    def cls_loss(p, batch):
+        feats = model.extract_features(p["backbone"], {"tokens": batch["tokens"]})
+        logits = feats @ p["head"]["W"] + p["head"]["b"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, batch["class_labels"][:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - picked)
+
+    freeze = {
+        "backbone": jax.tree.map(
+            lambda _: 0.0 if ft_strategy == "lp" else 1.0, params
+        ),
+        "head": jax.tree.map(
+            lambda _: 0.0 if ft_strategy == "feat" else 1.0, head
+        ),
+    }
+
+    @jax.jit
+    def local_step(p, batch):
+        grads = jax.grad(cls_loss)(p, batch)
+        return jax.tree.map(lambda w, g, f: w - lr * g * f, p, grads, freeze)
+
+    @jax.jit
+    def evaluate(p):
+        feats = model.extract_features(p["backbone"], {"tokens": test_tokens})
+        logits = feats @ p["head"]["W"] + p["head"]["b"]
+        return jnp.mean((jnp.argmax(logits, -1) == test_labels).astype(jnp.float32))
+
+    np_rng = np.random.default_rng(3)
+    for rnd in range(rounds):
+        chosen = np_rng.choice(n_clients, size=clients_per_round, replace=False)
+        deltas, weights = [], []
+        for k in chosen:
+            idx = parts[k]
+            batch = {"tokens": ds.tokens[idx], "class_labels": ds.labels[idx]}
+            local = local_step(full, batch)
+            deltas.append(jax.tree.map(lambda a, b: a - b, local, full))
+            weights.append(float(len(idx)))
+        wsum = sum(weights)
+        avg = jax.tree.map(
+            lambda *ds_: sum(w * d for w, d in zip(weights, ds_)) / wsum, *deltas
+        )
+        full = jax.tree.map(lambda p, d: p + d, full, avg)
+        if (rnd + 1) % 5 == 0 or rnd == rounds - 1:
+            acc = float(evaluate(full))
+            log["rounds"].append(rnd + 1)
+            log["ft_acc"].append(acc)
+            if verbose:
+                print(f"[ft:{ft_strategy}] round {rnd+1:4d}  acc={acc:.4f}")
+            if ckpt_dir:
+                save_pytree(os.path.join(ckpt_dir, f"ckpt_{rnd+1}.npz"),
+                            {"head": full["head"], "round": rnd + 1})
+    return log
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="fed3r-mnv2-proxy-smoke")
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--clients", type=int, default=40)
+    ap.add_argument("--per-round", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--ft-strategy", default="feat", choices=["full", "lp", "feat"])
+    ap.add_argument("--no-fed3r-init", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    run(
+        args.arch, rounds=args.rounds, n_clients=args.clients,
+        clients_per_round=args.per_round, seq_len=args.seq_len,
+        ft_strategy=args.ft_strategy, use_fed3r_init=not args.no_fed3r_init,
+        ckpt_dir=args.ckpt_dir,
+    )
+
+
+if __name__ == "__main__":
+    main()

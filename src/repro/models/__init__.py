@@ -1,0 +1,5 @@
+"""Backbone zoo: pure-JAX implementations of the assigned architectures."""
+from repro.models.model import (  # noqa: F401
+    Model,
+    build_model,
+)

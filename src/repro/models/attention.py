@@ -1,0 +1,345 @@
+"""Attention: GQA/MHA/MQA with KV cache, sliding window, chunked prefill.
+
+Design notes
+------------
+* Layout: q ``(B, Sq, H, hd)``, k/v ``(B, Sk, KV, hd)``; heads dim is the
+  tensor-parallel shard axis on the production mesh.
+* Masking is *position-based*: every key slot carries its absolute position
+  (``k_pos``; -1 = empty slot).  A query at position p attends to slots with
+  ``0 <= k_pos <= p`` and, for sliding-window variants, ``k_pos > p - W``.
+  This one rule covers train, prefill, ring-buffer decode and local attention.
+* The KV cache is a ring buffer of capacity ``Scap`` (= window for
+  sliding-window archs): slot ``j`` holds the latest position ``p`` with
+  ``p % Scap == j``.  RoPE is applied to keys at *write* time, so cached keys
+  never need re-rotation.
+* Prefill uses a q-chunked exact softmax (memory O(B·H·chunk·Sk) instead of
+  O(B·H·S²)); with a sliding window the key range per chunk is dynamically
+  sliced, making prefill O(S·W).  The Pallas flash-attention kernel
+  (kernels/flash_attention.py) is the TPU fast path for the same contract.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init
+from repro.sharding.hints import hint, mesh_axis_size
+
+Q_CHUNK = 1024  # prefill query-chunk size
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def attn_init(rng, cfg: ModelConfig, cross: bool = False) -> dict:
+    """QKV/O projection parameters. ``cross``: k/v consume encoder states."""
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    r = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(r[0], (d, H, hd)),
+        "wk": dense_init(r[1], (d, KV, hd)),
+        "wv": dense_init(r[2], (d, KV, hd)),
+        "wo": dense_init(r[3], (H, hd, d), in_axis=0),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), jnp.float32)
+        p["bk"] = jnp.zeros((KV, hd), jnp.float32)
+        p["bv"] = jnp.zeros((KV, hd), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+
+def _scores_softmax_values(q, k, v, q_pos, k_pos, window, bidirectional):
+    """Exact attention for one q block against a key range.
+
+    q: (B, Sq, KV, G, hd)   k/v: (B, Sk, KV, hd)
+    q_pos: (Sq,) int32      k_pos: (Sk,) int32 (−1 = empty slot)
+    returns (B, Sq, KV, G, hd)
+    """
+    hd = q.shape[-1]
+    KV, Sk = k.shape[2], k.shape[1]
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k) * scale  # (B,KV,G,Sq,Sk)
+    scores = scores.astype(jnp.float32)
+    # Shard the fp32 score block: kv-heads when they divide the TP axis,
+    # else the key/sequence axis (context-parallel attention — softmax and
+    # the value contraction reduce over the sharded axis via small psums).
+    if KV % max(mesh_axis_size("model"), 1) == 0:
+        scores = hint(scores, "batch", "model", None, None, None)
+    elif Sk % max(mesh_axis_size("model"), 1) == 0:
+        scores = hint(scores, "batch", None, None, None, "model")
+    else:
+        scores = hint(scores, "batch", None, None, None, None)
+
+    valid = k_pos[None, :] >= 0  # (1, Sk)
+    if not bidirectional:
+        valid = valid & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        valid = valid & (k_pos[None, :] > q_pos[:, None] - window)
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+
+
+def multihead_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    *,
+    window: Optional[int] = None,
+    bidirectional: bool = False,
+) -> jax.Array:
+    """Chunked exact GQA attention.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd); q_pos: (Sq,); k_pos: (Sk,).
+    Returns (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+
+    if Sq <= 2 * Q_CHUNK:
+        out = _scores_softmax_values(qg, k, v, q_pos, k_pos, window, bidirectional)
+        return out.reshape(B, Sq, H, hd)
+
+    assert Sq % Q_CHUNK == 0, f"Sq={Sq} not divisible by Q_CHUNK={Q_CHUNK}"
+    n_chunks = Sq // Q_CHUNK
+    q_chunks = qg.reshape(B, n_chunks, Q_CHUNK, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    pos_chunks = q_pos.reshape(n_chunks, Q_CHUNK)
+
+    # With a sliding window each q chunk only needs keys in
+    # [chunk_start - window + 1, chunk_end); slice that range (static length).
+    use_slice = window is not None and not bidirectional and Sk > window + Q_CHUNK
+    slice_len = min(Sk, (window + Q_CHUNK)) if use_slice else Sk
+
+    def body(_, xs):
+        qc, pc = xs  # (B, Q_CHUNK, KV, G, hd), (Q_CHUNK,)
+        if use_slice:
+            start = jnp.clip(pc[0] - (window - 1), 0, Sk - slice_len)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, slice_len, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, slice_len, axis=1)
+            kpc = jax.lax.dynamic_slice_in_dim(k_pos, start, slice_len, axis=0)
+        else:
+            kc, vc, kpc = k, v, k_pos
+        out = _scores_softmax_values(qc, kc, vc, pc, kpc, window, bidirectional)
+        return None, out
+
+    # flash-style memory discipline: per-chunk scores/probs are recomputed in
+    # the backward pass instead of being saved across the whole q sweep
+    body = jax.checkpoint(body, prevent_cse=False)
+    _, outs = jax.lax.scan(body, None, (q_chunks, pos_chunks))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer, optionally int8-quantized)
+# ---------------------------------------------------------------------------
+
+
+def _quantize(x: jax.Array):
+    """Symmetric per-(batch, token, head) int8 quantization over hd."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(cache: dict, name: str, dtype) -> jax.Array:
+    """Read k/v back to compute dtype (no-op for unquantized caches)."""
+    arr = cache[name]
+    if arr.dtype == jnp.int8:
+        return (arr.astype(jnp.float32) * cache[name + "_scale"]).astype(dtype)
+    return arr.astype(dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype) -> dict:
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    if cfg.kv_cache_quant:
+        return {
+            "k": jnp.zeros((batch, capacity, KV, hd), jnp.int8),
+            "v": jnp.zeros((batch, capacity, KV, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, capacity, KV, 1), jnp.float32),
+            "v_scale": jnp.zeros((batch, capacity, KV, 1), jnp.float32),
+            "pos": jnp.full((capacity,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, capacity, KV, hd), dtype),
+        "v": jnp.zeros((batch, capacity, KV, hd), dtype),
+        "pos": jnp.full((capacity,), -1, jnp.int32),
+    }
+
+
+def fill_cache_from_prefill(cache: dict, k: jax.Array, v: jax.Array, seq_len: int) -> dict:
+    """Scatter the last ``capacity`` keys of a prefill into ring slots."""
+    cap = cache["k"].shape[1]
+    keep = min(seq_len, cap)
+    ps = jnp.arange(seq_len - keep, seq_len, dtype=jnp.int32)
+    slots = ps % cap
+    k_w, v_w = k[:, seq_len - keep :], v[:, seq_len - keep :]
+    out = {"pos": cache["pos"].at[slots].set(ps)}
+    if cache["k"].dtype == jnp.int8:
+        kq, ks = _quantize(k_w)
+        vq, vs = _quantize(v_w)
+        out.update(
+            k=cache["k"].at[:, slots].set(kq),
+            v=cache["v"].at[:, slots].set(vq),
+            k_scale=cache["k_scale"].at[:, slots].set(ks),
+            v_scale=cache["v_scale"].at[:, slots].set(vs),
+        )
+    else:
+        out.update(
+            k=cache["k"].at[:, slots].set(k_w.astype(cache["k"].dtype)),
+            v=cache["v"].at[:, slots].set(v_w.astype(cache["v"].dtype)),
+        )
+    return out
+
+
+def cache_decode_update(cache: dict, k_t: jax.Array, v_t: jax.Array, pos: jax.Array) -> dict:
+    """Write one token (k_t/v_t: (B, 1, KV, hd)) at ring slot pos % cap."""
+    cap = cache["k"].shape[1]
+    slot = (pos % cap).astype(jnp.int32)
+
+    def upd(buf, val):
+        return jax.lax.dynamic_update_slice_in_dim(buf, val, slot, axis=1)
+
+    out = {
+        "pos": jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], pos[None].astype(jnp.int32), slot, axis=0
+        )
+    }
+    if cache["k"].dtype == jnp.int8:
+        kq, ks = _quantize(k_t)
+        vq, vs = _quantize(v_t)
+        out.update(
+            k=upd(cache["k"], kq), v=upd(cache["v"], vq),
+            k_scale=upd(cache["k_scale"], ks), v_scale=upd(cache["v_scale"], vs),
+        )
+    else:
+        out.update(
+            k=upd(cache["k"], k_t.astype(cache["k"].dtype)),
+            v=upd(cache["v"], v_t.astype(cache["v"].dtype)),
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# full attention layer (projections + rope + cache + attention + out-proj)
+# ---------------------------------------------------------------------------
+
+
+def _project_q(p, x, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    return hint(q, "batch", None, "model", None)
+
+
+def _project_kv(p, x, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    ms = max(mesh_axis_size("model"), 1)
+    if k.shape[2] % ms == 0:  # kv heads shard evenly
+        return (hint(k, "batch", None, "model", None),
+                hint(v, "batch", None, "model", None))
+    # context-parallel fallback: shard the sequence dim
+    return (hint(k, "batch", "model", None, None),
+            hint(v, "batch", "model", None, None))
+
+
+def attn_apply(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    *,
+    angles: Optional[jax.Array] = None,
+    window: Optional[int] = None,
+    bidirectional: bool = False,
+    cache: Optional[dict] = None,
+    decode_pos: Optional[jax.Array] = None,
+    build_cache: bool = False,
+    cache_capacity: Optional[int] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Self-attention layer.
+
+    Modes:
+      * train/encoder: ``cache=None, build_cache=False`` -> (y, None)
+      * prefill:       ``build_cache=True``              -> (y, filled cache)
+      * decode:        ``cache`` set, x is (B, 1, d), ``decode_pos`` scalar
+                       -> (y, updated cache)
+    """
+    B, S, _ = x.shape
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, x, cfg)
+
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+
+    if cache is not None:  # decode: one new token against the ring buffer
+        assert S == 1 and decode_pos is not None
+        cache = cache_decode_update(cache, k, v, decode_pos)
+        q_pos = decode_pos[None].astype(jnp.int32)
+        y = multihead_attention(
+            q, dequantize_kv(cache, "k", x.dtype), dequantize_kv(cache, "v", x.dtype),
+            q_pos, cache["pos"], window=window, bidirectional=False,
+        )
+    else:
+        q_pos = jnp.arange(S, dtype=jnp.int32)
+        y = multihead_attention(q, k, v, q_pos, q_pos, window=window,
+                                bidirectional=bidirectional)
+        if build_cache:
+            cap = cache_capacity or (window if window else S)
+            new = init_cache(cfg, B, cap, k.dtype)
+            cache = fill_cache_from_prefill(new, k, v, S)
+
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(x.dtype))
+    return out, cache
+
+
+def cross_attn_apply(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    *,
+    enc_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    enc_states: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Encoder-decoder cross attention (whisper).
+
+    Either ``enc_states`` (first pass: project and return reusable kv) or
+    ``enc_kv`` (cached projections) must be given.
+    """
+    if enc_kv is None:
+        assert enc_states is not None
+        enc_kv = _project_kv(p, enc_states, cfg)
+    k, v = enc_kv
+    q = _project_q(p, x, cfg)
+    Sk = k.shape[1]
+    q_pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    k_pos = jnp.arange(Sk, dtype=jnp.int32)
+    y = multihead_attention(q, v_cast(k, x.dtype), v_cast(v, x.dtype), q_pos, k_pos,
+                            bidirectional=True)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(x.dtype))
+    return out, enc_kv
+
+
+def v_cast(a: jax.Array, dtype) -> jax.Array:
+    return a.astype(dtype)

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity dispatch, shared experts.
+
+Faithful to the two assigned MoE families:
+  * DeepSeekMoE 16B  — 64 fine-grained routed experts, top-6, 2 shared experts
+    (arXiv:2401.06066).
+  * Llama-4 Scout    — 16 experts, top-1, 1 shared expert.
+
+Implementation: Gshard-style capacity dispatch via scatter-add into an
+``(E, C, d)`` expert buffer (the token-permutation formulation — memory
+O(T·k·capacity_factor·d), never O(T·E)).  On the production mesh the expert
+dim E is sharded over the "model" axis (expert parallelism); GSPMD lowers the
+dispatch/combine scatters into all-to-all-style collectives.
+
+Shared experts are algebraically fused into a single wide gated MLP: the sum
+of S swiglu experts equals one swiglu MLP with the gate/up matrices
+concatenated on the hidden axis and the down matrices stacked — exact, not an
+approximation.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, mlp_apply, mlp_init
+from repro.sharding.hints import hint, mesh_axis_size
+
+
+def moe_init(rng, cfg: ModelConfig) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.d_expert
+    r = jax.random.split(rng, 5)
+    p = {
+        "router": dense_init(r[0], (d, E)),
+        "w_gate": dense_init(r[1], (E, d, f), in_axis=1),
+        "w_up": dense_init(r[2], (E, d, f), in_axis=1),
+        "w_down": dense_init(r[3], (E, f, d), in_axis=1),
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = mlp_init(r[4], cfg, d_ff=cfg.n_shared_experts * cfg.d_expert)
+    return p
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(8, ((cap + 7) // 8) * 8)  # pad to a lane-friendly multiple
+
+
+def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_load_balance_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xf = x.reshape(T, d)
+
+    # ---- routing (fp32 for numerics) -------------------------------------
+    logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, k)  # (T, k)
+
+    # ---- load-balance auxiliary loss (Switch/Gshard form) ------------------
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    dispatch_frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_idx, E, dtype=jnp.float32), axis=1), axis=0
+    ) / k
+    aux = E * jnp.sum(me * dispatch_frac)
+
+    # ---- capacity positions (GROUP-LOCAL, Gshard-style) ---------------------
+    # Positions are computed with a cumsum *within* data-shard-aligned token
+    # groups, never across shards: a cross-shard cumsum forces the SPMD
+    # partitioner into a pathological dense lowering (measured: 95% of all
+    # HLO FLOPs at prefill_32k — see EXPERIMENTS.md §Perf H1).  Each group
+    # owns C/G capacity slots per expert; dropping becomes group-local,
+    # which is the standard Gshard/Switch semantics.
+    # Groups align with the INNERMOST data axis only — never the DCN "pod"
+    # axis: a (pod,data)-wide group sharding makes the partitioner emit
+    # cross-pod reshards (measured 47.6 GB/chip at 2×16×16; pinned to
+    # "data": 9.8 GB — EXPERIMENTS.md §Perf H1/known-items).
+    G = max(mesh_axis_size("data"), 1)
+    while T % G != 0:  # tiny batches in tests: fall back to fewer groups
+        G //= 2
+    G = max(G, 1)
+    Tg = T // G
+    C = _capacity(cfg, T)
+    Cg = max(8, -(-C // G))
+
+    idx_g = top_idx.reshape(G, Tg * k)  # (G, Tg*k) routing per group
+    onehot = jax.nn.one_hot(idx_g, E, dtype=jnp.int32)  # (G, Tg*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot  # group-local prefix sums
+    pos_g = jnp.sum(pos_in_e * onehot, axis=-1)  # (G, Tg*k)
+    keep_g = (pos_g < Cg).astype(x.dtype)
+    pos_g = jnp.minimum(pos_g, Cg - 1)
+
+    # ---- dispatch: BATCHED scatter over the group dim ------------------------
+    # The scatter is vmapped over G with G sharded on the data axes, so its
+    # locality is structural (each shard scatters only its own group) — GSPMD
+    # cannot prove locality of value-dependent flat indices, and the unbatched
+    # formulations lower to a full-buffer all-reduce (15.6 GB/layer wire) or
+    # dense masked updates (95% of HLO FLOPs).  See EXPERIMENTS.md §Perf H1.
+    dt = x.dtype
+    x_g = hint(jnp.repeat(xf, k, axis=0).reshape(G, Tg * k, d), "batch", None, None)
+
+    def scatter_group(xg, ig, pg, kg):
+        bufg = jnp.zeros((E, Cg, d), dt)
+        return bufg.at[ig, pg].add(xg * kg[:, None])
+
+    buf = jax.vmap(scatter_group)(x_g, idx_g, pos_g, keep_g)  # (G, E, Cg, d)
+    buf = hint(buf, "batch", "model", None, None)
+
+    # ---- expert FFN (2-D parallel: groups over data × experts over model) ---
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(dt)))
+    u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(dt))
+    h = hint(
+        jnp.einsum("gecf,efd->gecd", g * u, p["w_down"].astype(dt)),
+        "batch", "model", None, None,
+    )
+
+    # ---- combine: batched gather back to tokens ------------------------------
+    y_rep = jax.vmap(lambda hg, ig, pg: hg[ig, pg])(h, idx_g, pos_g)
+    y_rep = hint(y_rep * keep_g[..., None], "batch", None, None)  # (G, Tg*k, d)
+    w = top_p.reshape(G, Tg * k).astype(dt)[..., None]
+    y = jnp.sum((y_rep * w).reshape(T, k, d), axis=1)
+
+    if "shared" in p:
+        y = y + mlp_apply(cfg.replace(mlp_type="swiglu"), p["shared"], xf)
+
+    return y.reshape(B, S, d), aux

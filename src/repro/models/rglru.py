@@ -1,0 +1,136 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The recurrent block is:
+
+    x ── proj_main ── causal-conv1d(4) ── RG-LRU ──┐
+                                                    ⊙ ── proj_out ──> y
+    x ── proj_gate ── GeLU ───────────────────────┘
+
+with the Real-Gated LRU recurrence (elementwise over the lru_width channels):
+
+    r_t = σ(W_a x_t + b_a)                    recurrence gate
+    i_t = σ(W_x x_t + b_x)                    input gate
+    log a_t = −c · softplus(Λ) · r_t          (c = 8)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+TPU adaptation: the linear recurrence is evaluated with
+``jax.lax.associative_scan`` (parallel prefix — log-depth on the sequence)
+instead of a CUDA sequential kernel; decode is a single elementwise update.
+State is carried in fp32 (the paper keeps the recurrence in fp32 as well).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    causal_conv1d_apply,
+    causal_conv1d_init,
+    causal_conv1d_step,
+    dense_init,
+)
+from repro.sharding.hints import hint
+
+_C = 8.0  # Griffin's fixed recurrence-sharpness constant
+
+
+def rglru_init(rng, cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    r = jax.random.split(rng, 6)
+    # Λ initialised so that a ∈ (0.9, 0.999) at r=1 (Griffin appendix).
+    u = jax.random.uniform(r[5], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log(u)/c)
+    return {
+        "proj_main": dense_init(r[0], (d, w)),
+        "proj_gate": dense_init(r[1], (d, w)),
+        "conv": causal_conv1d_init(r[2], w, 4),
+        "w_a": dense_init(r[3], (w, w)),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_x": dense_init(r[4], (w, w)),
+        "b_x": jnp.zeros((w,), jnp.float32),
+        "lambda": lam,
+        "proj_out": dense_init(jax.random.fold_in(rng, 7), (w, d)),
+    }
+
+
+def _gates(p: dict, x: jax.Array):
+    """x: (..., w) fp32 -> (log_a, gated_input) both fp32."""
+    r = jax.nn.sigmoid(x @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(x @ p["w_x"] + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12))
+    return log_a, beta * (i * x)
+
+
+def _linear_scan(log_a: jax.Array, b: jax.Array, h0: Optional[jax.Array]):
+    """h_t = exp(log_a_t)·h_{t-1} + b_t via associative parallel prefix.
+
+    log_a, b: (B, S, w) fp32; h0: (B, w) or None. Returns h: (B, S, w).
+    """
+    if h0 is not None:
+        # fold the initial state into the first step
+        b = b.at[:, 0, :].add(jnp.exp(log_a[:, 0, :]) * h0)
+
+    def combine(left, right):
+        la1, b1 = left
+        la2, b2 = right
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h
+
+
+def rglru_apply(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    *,
+    build_cache: bool = False,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Sequence mode. x: (B, S, d) -> (y, cache?)."""
+    dt = x.dtype
+    gate = hint(jax.nn.gelu(x @ p["proj_gate"].astype(dt)), "batch", None, "model")
+    main_raw = hint(x @ p["proj_main"].astype(dt), "batch", None, "model")
+    main = causal_conv1d_apply(p["conv"], main_raw)
+
+    m32 = main.astype(jnp.float32)
+    log_a, b = _gates(p, m32)
+    log_a = hint(log_a, "batch", None, "model")
+    b = hint(b, "batch", None, "model")
+    h = hint(_linear_scan(log_a, b, None), "batch", None, "model")  # fp32
+
+    y = (h.astype(dt) * gate) @ p["proj_out"].astype(dt)
+
+    cache = None
+    if build_cache:
+        w_conv = p["conv"]["kernel"].shape[0]
+        S = x.shape[1]
+        tail = main_raw[:, max(0, S - (w_conv - 1)) :, :]
+        pad = jnp.zeros((x.shape[0], (w_conv - 1) - tail.shape[1], tail.shape[-1]), dt)
+        cache = {
+            "h": h[:, -1, :],  # (B, w) fp32
+            "conv": jnp.concatenate([pad, tail], axis=1),
+        }
+    return y, cache
+
+
+def rglru_decode_step(
+    cfg: ModelConfig, p: dict, x_t: jax.Array, cache: dict
+) -> Tuple[jax.Array, dict]:
+    """One-token update. x_t: (B, 1, d)."""
+    dt = x_t.dtype
+    xt = x_t[:, 0, :]
+    gate = jax.nn.gelu(xt @ p["proj_gate"].astype(dt))
+    main_raw = xt @ p["proj_main"].astype(dt)
+    conv_state, main = causal_conv1d_step(p["conv"], cache["conv"], main_raw)
+
+    m32 = main.astype(jnp.float32)
+    log_a, b = _gates(p, m32)
+    h = jnp.exp(log_a) * cache["h"] + b  # (B, w) fp32
+
+    y = ((h.astype(dt) * gate) @ p["proj_out"].astype(dt))[:, None, :]
+    return y, {"h": h, "conv": conv_state}

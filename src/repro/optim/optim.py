@@ -1,0 +1,95 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+Used by (a) the federated client local steps (SGD, per App. C: lr=0.1,
+wd=4e-5), (b) the server optimizer (SGD with optional momentum — FedAvgM),
+and (c) the centralized training driver (AdamW).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptimizerSpec(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (updates, new_state)
+
+
+# ---------------------------------------------------------------------------
+# SGD (+ momentum, + decoupled weight decay)
+# ---------------------------------------------------------------------------
+
+
+def sgd_init(params, momentum: float = 0.0):
+    if momentum == 0.0:
+        return {}
+    return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+
+def sgd_update(grads, state, params, lr, *, momentum: float = 0.0, weight_decay: float = 0.0):
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+    if momentum:
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        updates = jax.tree.map(lambda m: -lr * m, mu)
+        return updates, {"mu": mu}
+    return jax.tree.map(lambda g: -lr * g, grads), state
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    return {
+        "m": jax.tree.map(jnp.zeros_like, params),
+        "v": jax.tree.map(jnp.zeros_like, params),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads, state, params, lr, *, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0
+):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state["v"], grads)
+    tc = t.astype(jnp.float32)
+    bc1 = 1 - b1**tc
+    bc2 = 1 - b2**tc
+
+    def upd(m_, v_, p):
+        step = m_ / bc1 / (jnp.sqrt(v_ / bc2) + eps)
+        return -lr * (step + weight_decay * p)
+
+    updates = jax.tree.map(upd, m, v, params)
+    return updates, {"m": m, "v": v, "t": t}
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def make_optimizer(
+    name: str,
+    *,
+    momentum: float = 0.0,
+    weight_decay: float = 0.0,
+) -> OptimizerSpec:
+    if name == "sgd":
+        return OptimizerSpec(
+            init=functools.partial(sgd_init, momentum=momentum),
+            update=functools.partial(
+                sgd_update, momentum=momentum, weight_decay=weight_decay
+            ),
+        )
+    if name == "adamw":
+        return OptimizerSpec(
+            init=adamw_init,
+            update=functools.partial(adamw_update, weight_decay=weight_decay),
+        )
+    raise ValueError(name)

@@ -1,0 +1,6 @@
+from repro.sharding.specs import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    param_specs,
+    stats_specs,
+)

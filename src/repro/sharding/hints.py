@@ -1,0 +1,80 @@
+"""Logical sharding hints for model intermediates (maxtext-style).
+
+GSPMD propagation alone picks pathological layouts for some of our layers
+(observed: involuntary full rematerialization/replication of SSD states and
+MoE dispatch buffers).  ``hint(x, *tokens)`` places an explicit
+``with_sharding_constraint`` using *logical* dim tokens:
+
+    "batch"  -> sharded over the data axes ("pod","data") when divisible
+    "model"  -> sharded over the tensor-parallel axis when divisible
+    None     -> unconstrained... replicated along that dim
+
+Hints resolve against the *ambient* abstract mesh (``jax.set_mesh``); when no
+mesh is set (unit tests, the CPU simulator) they are exact no-ops, so model
+code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _resolve(shape, tokens, axis_names, axis_sizes):
+    data_axes = tuple(a for a in axis_names if a != "model")
+    spec = []
+    for i, tok in enumerate(tokens):
+        if tok is None or i >= len(shape):
+            spec.append(None)
+            continue
+        if tok == "batch":
+            # try full data product, then single trailing data axis
+            for axes in (data_axes,) + tuple((a,) for a in data_axes[::-1]):
+                size = 1
+                for a in axes:
+                    size *= axis_sizes[a]
+                if size > 1 and shape[i] % size == 0:
+                    spec.append(axes if len(axes) > 1 else axes[0])
+                    break
+            else:
+                spec.append(None)
+        elif tok == "model":
+            ms = axis_sizes.get("model", 1)
+            spec.append("model" if ms > 1 and shape[i] % ms == 0 else None)
+        else:
+            raise ValueError(tok)
+    # pad to full rank
+    spec += [None] * (len(shape) - len(spec))
+    return P(*spec)
+
+
+def data_shards() -> int:
+    """Product of the non-"model" (batch-carrying) mesh axis sizes; 1 if none."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return 1
+    s = 1
+    for name, size in zip(mesh.axis_names, mesh.axis_sizes):
+        if name != "model":
+            s *= size
+    return s
+
+
+def mesh_axis_size(name: str) -> int:
+    """Size of an ambient-mesh axis (1 when no mesh is set)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    return sizes.get(name, 1)
+
+
+def hint(x: jax.Array, *tokens) -> jax.Array:
+    """Constrain ``x``'s sharding by logical dim tokens; no-op without mesh."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    axis_sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    spec = _resolve(x.shape, tokens, mesh.axis_names, axis_sizes)
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,271 @@
+"""Parameter / activation / cache PartitionSpec rules for the production mesh.
+
+Tensor-parallel convention (Megatron-style, adapted to GSPMD):
+  * attention q/k/v projections shard the (kv-)head axis on "model";
+  * MLP shards the hidden (d_ff) axis; down-projection is contracted back
+    (GSPMD inserts the reduce-scatter/all-reduce);
+  * embeddings and LM head shard the vocab axis;
+  * MoE experts shard the expert axis (expert parallelism);
+  * Mamba2 / RG-LRU shard their inner width / head axes;
+  * batch dims shard over ("pod", "data").
+
+**Divisibility fallback chains.**  ``jax.jit`` input shardings require each
+sharded dim to divide the mesh axis.  Several assigned configs violate the
+primary choice (qwen2-7b: 28 heads on a 16-way axis; whisper: 20 heads,
+vocab 51866; mamba2: vocab 50280; GQA kv=2/4/8 < 16).  Each rule therefore
+lists *preference-ordered* candidate specs; the first one whose sharded dims
+all divide evenly is used, else the leaf is replicated:
+
+  * projection weights: head dim → d_model (row-parallel: the contraction
+    over sharded d makes GSPMD emit one activation all-reduce — correct,
+    bounded cost; revisited in the perf pass);
+  * embeddings: vocab → d_model;
+  * KV caches: kv-head dim → sequence dim (context-parallel attention: the
+    softmax/value contractions over the sharded key axis reduce to small
+    per-query psums — an efficient decode layout) → replicated.
+"""
+from __future__ import annotations
+
+import re
+from typing import Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# (path regex, preference-ordered trailing-dim spec candidates).
+_PARAM_RULES: Sequence[Tuple[str, Sequence[Tuple]]] = (
+    # embeddings / unembedding
+    (r"embed/embedding$", [("model", None), (None, "model")]),  # (V, d)
+    (r"dec_pos/embedding$", [(None, None)]),  # learned positions: replicated
+    (r"lm_head/kernel$", [(None, "model"), ("model", None)]),  # (d, V)
+    # attention projections
+    (r"(attn|self_attn|cross_attn)/wq$", [(None, "model", None), ("model", None, None)]),
+    (r"(attn|self_attn|cross_attn)/wk$", [(None, "model", None), ("model", None, None)]),
+    (r"(attn|self_attn|cross_attn)/wv$", [(None, "model", None), ("model", None, None)]),
+    (r"(attn|self_attn|cross_attn)/wo$", [("model", None, None), (None, None, "model")]),
+    (r"(attn|self_attn|cross_attn)/b[qkv]$", [("model", None), (None, None)]),
+    # dense MLP (and MoE shared-expert MLP)
+    (r"(mlp|shared)/w_gate$", [(None, "model")]),
+    (r"(mlp|shared)/w_up$", [(None, "model")]),
+    (r"(mlp|shared)/w_down$", [("model", None)]),
+    (r"(mlp|shared)/b_up$", [("model",)]),
+    (r"(mlp|shared)/b_down$", [(None,)]),
+    # MoE routed experts: expert-parallel on the leading E axis
+    (r"moe/router$", [(None, None)]),  # (d, E) tiny: replicated
+    (r"moe/w_gate$", [("model", None, None), (None, None, "model")]),
+    (r"moe/w_up$", [("model", None, None), (None, None, "model")]),
+    (r"moe/w_down$", [("model", None, None), (None, "model", None)]),
+    # Mamba2
+    (r"ssm/in_proj$", [(None, "model"), ("model", None)]),
+    (r"ssm/conv/kernel$", [(None, "model")]),
+    (r"ssm/conv/bias$", [("model",)]),
+    (r"ssm/A_log$", [("model",)]),
+    (r"ssm/dt_bias$", [("model",)]),
+    (r"ssm/D$", [("model",)]),
+    (r"ssm/norm_scale$", [("model",)]),
+    (r"ssm/out_proj$", [("model", None), (None, None)]),
+    # RG-LRU
+    (r"rec/proj_main$", [(None, "model")]),
+    (r"rec/proj_gate$", [(None, "model")]),
+    (r"rec/conv/kernel$", [(None, "model")]),
+    (r"rec/conv/bias$", [("model",)]),
+    (r"rec/w_a$", [(None, "model")]),
+    (r"rec/w_x$", [(None, "model")]),
+    (r"rec/b_a$", [("model",)]),
+    (r"rec/b_x$", [("model",)]),
+    (r"rec/lambda$", [("model",)]),
+    (r"rec/proj_out$", [("model", None), (None, None)]),
+    # norms: replicated
+    (r"(norm\d?|final_norm|enc_norm)/(scale|bias)$", [(None,)]),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _fits(shape, trailing, axis_sizes) -> bool:
+    """Every sharded trailing dim must divide the mesh axis size."""
+    off = len(shape) - len(trailing)
+    for i, ax in enumerate(trailing):
+        if ax is None:
+            continue
+        size = axis_sizes[ax] if isinstance(ax, str) else 1
+        if isinstance(ax, tuple):
+            size = 1
+            for a in ax:
+                size *= axis_sizes[a]
+        if shape[off + i] % size != 0:
+            return False
+    return True
+
+
+def _pick(shape, candidates, axis_sizes) -> P:
+    for trailing in candidates:
+        if len(trailing) > len(shape):
+            continue
+        if _fits(shape, trailing, axis_sizes):
+            n_lead = len(shape) - len(trailing)
+            return P(*((None,) * n_lead + tuple(trailing)))
+    return P()  # replicate
+
+
+_FSDP_MIN_DIM = 1024  # don't FSDP-shard tiny dims
+
+
+def _add_fsdp(shape, spec: P, axis_sizes, fsdp_axis="data") -> P:
+    """Shard the largest eligible unsharded *trailing-rule* dim over data.
+
+    FSDP (ZeRO-3 style): parameters additionally sharded over the data axis;
+    GSPMD all-gathers each layer's weights inside the scan — required for
+    the ≥33B configs whose fp32 params exceed HBM under 16-way TP alone.
+    The leading layer-stack dim is never touched (scan axis).
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    # spec from _pick is full-rank; guard anyway
+    entries = list(spec)
+    if len(entries) != len(shape):
+        return spec
+    if isinstance(fsdp_axis, str):
+        dsize = axis_sizes.get(fsdp_axis, 1)
+    else:
+        dsize = 1
+        for a in fsdp_axis:
+            dsize *= axis_sizes.get(a, 1)
+        fsdp_axis = tuple(fsdp_axis)
+    best, best_dim = -1, None
+    for i in range(len(shape)):
+        # skip leading stack dims: only dims addressed by the rule's trailing
+        # spec are eligible — approximated as "dims not equal to a small L".
+        if entries[i] is not None:
+            continue
+        if shape[i] >= _FSDP_MIN_DIM and shape[i] % dsize == 0 and shape[i] > best:
+            # never shard dim 0 of stacked leaves (ndim>=3 heuristics: dim 0
+            # of a >=3D leaf with small size is the layer stack)
+            if i == 0 and len(shape) >= 3:
+                continue
+            best, best_dim = shape[i], i
+    if best_dim is None:
+        return spec
+    entries[best_dim] = fsdp_axis
+    return P(*entries)
+
+
+def param_specs(cfg: ModelConfig, params, axis_sizes=None, *, fsdp: bool = False,
+                fsdp_axis="data") -> object:
+    """PartitionSpec pytree matching ``params`` (works on abstract trees).
+
+    ``axis_sizes``: {"model": 16, "data": 16, ...}; defaults to 16-way model.
+    ``fsdp``: additionally shard big dims over ``fsdp_axis`` (str or tuple —
+    pass ("pod", "data") for 512-way multi-pod ZeRO-3; see _add_fsdp).
+    """
+    axis_sizes = axis_sizes or {"model": 16, "data": 16, "pod": 2}
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        for pattern, candidates in _PARAM_RULES:
+            if re.search(pattern, ps):
+                spec = _pick(leaf.shape, candidates, axis_sizes)
+                # embedding-family tables are excluded from FSDP: gathers on
+                # doubly-sharded tables trip an XLA SPMD partitioner bug, and
+                # the vocab-sharded tables are small enough per chip anyway.
+                if fsdp and not re.search(r"(embedding|lm_head)", ps):
+                    spec = _add_fsdp(leaf.shape, spec, axis_sizes, fsdp_axis)
+                return spec
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / statistics specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, batch, data_axes: Tuple[str, ...], axis_sizes=None
+                ) -> object:
+    axis_sizes = axis_sizes or {"model": 16, "data": 16, "pod": 2}
+    da = tuple(data_axes)
+    da_size = 1
+    for a in da:
+        da_size *= axis_sizes[a]
+
+    def spec(path, leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % da_size == 0:
+            return P(*((da,) + (None,) * (leaf.ndim - 1)))
+        return P()  # e.g. long_500k global_batch=1: replicated
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def cache_specs(cfg: ModelConfig, cache, data_axes: Tuple[str, ...], axis_sizes=None
+                ) -> object:
+    """KV/state cache specs with fallback chains (see module docstring)."""
+    axis_sizes = axis_sizes or {"model": 16, "data": 16, "pod": 2}
+    da = tuple(data_axes)
+    da_size = 1
+    for a in da:
+        da_size *= axis_sizes[a]
+
+    def batch_ax(b):
+        return da if b % da_size == 0 else None
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        nd = leaf.ndim
+        last = ps.rsplit("/", 1)[-1]
+        sizes = dict(axis_sizes)
+
+        if last in ("k", "v", "k_scale", "v_scale") or (
+            last in ("0", "1") and "cross" in ps
+        ):
+            # (..., B, cap, KV, hd|1): kv-heads -> sequence -> replicated
+            b, cap, kv = leaf.shape[-4], leaf.shape[-3], leaf.shape[-2]
+            ba = batch_ax(b)
+            cands = [
+                (ba, None, "model", None),
+                (ba, "model", None, None),  # context-parallel keys
+                (ba, None, None, None),
+            ]
+            return _pick(leaf.shape, cands, sizes) if ba else _pick(
+                leaf.shape, [(None,) + c[1:] for c in cands], sizes
+            )
+        if last == "pos":
+            return P()
+        if last == "state":  # (..., B, H, P, N)
+            ba = batch_ax(leaf.shape[-4])
+            return _pick(leaf.shape, [(ba, "model", None, None),
+                                      (ba, None, None, None)], sizes)
+        if last == "conv":  # (..., B, w, ch)
+            ba = batch_ax(leaf.shape[-3])
+            return _pick(leaf.shape, [(ba, None, "model"), (ba, None, None)], sizes)
+        if last == "h":  # (..., B, w)
+            ba = batch_ax(leaf.shape[-2])
+            return _pick(leaf.shape, [(ba, "model"), (ba, None)], sizes)
+        if nd >= 2:
+            ba = batch_ax(leaf.shape[-2])
+            return _pick(leaf.shape, [(None, ba) + (None,) * (nd - 2)], sizes)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def stats_specs(d: int = 0, axis_sizes=None, shard_rows: bool = True):
+    """FED3R statistics: A (d,d) and b (d,C) row-sharded over "model"."""
+    axis_sizes = axis_sizes or {"model": 16}
+    row = "model" if (shard_rows and (d == 0 or d % axis_sizes["model"] == 0)) else None
+    from repro.core.fed3r import Fed3RStats
+
+    return Fed3RStats(A=P(row, None), b=P(row, None), n=P())

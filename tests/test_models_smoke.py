@@ -1,0 +1,72 @@
+"""Per-architecture smoke tests: reduced variant, forward + one train step.
+
+Deliverable (f): every assigned architecture instantiates (≤2-3 layers,
+d_model ≤ 512, ≤4 experts), runs a forward and a train step on CPU, and
+produces finite outputs of the right shape.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_batch
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+
+SMOKE = [a + "-smoke" for a in ASSIGNED_ARCHS] + ["fed3r-mnv2-proxy-smoke"]
+
+
+@pytest.mark.parametrize("name", SMOKE)
+def test_forward_and_train_step(name, rng):
+    cfg = get_config(name)
+    model = build_model(cfg)
+    params = model.init(rng)
+    B, S = 2, 32
+    batch = make_batch(cfg, rng, B, S)
+
+    # forward / loss
+    loss = model.loss(params, batch)
+    assert jnp.isfinite(loss), name
+    assert loss.shape == ()
+
+    # features (the FED3R φ)
+    feats = model.extract_features(params, batch)
+    assert feats.shape == (B, cfg.d_feat)
+    assert bool(jnp.all(jnp.isfinite(feats)))
+
+    # one SGD train step moves the loss
+    step = jax.jit(make_train_step(cfg, lr=0.05))
+    params2, loss1 = step(params, batch)
+    _, loss2 = step(params2, batch)
+    assert jnp.isfinite(loss2)
+    assert float(loss2) < float(loss1) + 0.5  # no blow-up
+
+
+@pytest.mark.parametrize("name", ["qwen2-7b-smoke", "deepseek-moe-16b-smoke"])
+def test_microbatched_train_step_matches_plain(name, rng):
+    """Gradient accumulation is mathematically the same step (bf16 tol)."""
+    cfg = get_config(name).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(rng)
+    batch = make_batch(cfg, rng, 4, 16)
+    s1 = jax.jit(make_train_step(cfg, lr=0.1, num_microbatches=1))
+    s4 = jax.jit(make_train_step(cfg, lr=0.1, num_microbatches=4))
+    p1, l1 = s1(params, batch)
+    p4, l4 = s4(params, batch)
+    # MoE routing depends on batch composition; dense archs should be close
+    if cfg.arch_type != "moe":
+        d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p4)
+        assert max(jax.tree.leaves(d)) < 5e-2
+
+
+@pytest.mark.parametrize("name", ["qwen2-7b-smoke"])
+def test_freeze_mask(name, rng):
+    cfg = get_config(name)
+    model = build_model(cfg)
+    params = model.init(rng)
+    batch = make_batch(cfg, rng, 2, 16)
+    freeze = jax.tree.map(lambda _: 0.0, params)  # everything frozen
+    step = jax.jit(make_train_step(cfg, lr=0.5, freeze=freeze))
+    p2, _ = step(params, batch)
+    same = jax.tree.map(lambda a, b: bool(jnp.all(a == b)), params, p2)
+    assert all(jax.tree.leaves(same))

@@ -1,0 +1,108 @@
+"""Hypothesis property tests for the system's invariants.
+
+The paper's central claim — exact aggregation — is an algebraic property
+amenable to property-based testing: for ANY partition, ANY order, ANY
+merge tree shape, the statistics (and hence W*) are identical.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fed3r, ncm
+from repro.federated.costs import CostModel
+
+D, C = 8, 4
+_RNG = np.random.default_rng(0)
+_FEATS = _RNG.normal(size=(120, D)).astype(np.float32)
+_LABELS = _RNG.integers(0, C, size=120).astype(np.int32)
+
+
+def _stats(idx):
+    return fed3r.client_stats(jnp.asarray(_FEATS[idx]), jnp.asarray(_LABELS[idx]), C)
+
+
+@st.composite
+def partitions(draw):
+    n = len(_LABELS)
+    k = draw(st.integers(min_value=1, max_value=10))
+    cuts = sorted(draw(
+        st.lists(st.integers(1, n - 1), min_size=k - 1, max_size=k - 1, unique=True)
+    ))
+    perm = draw(st.permutations(list(range(n))))
+    return np.split(np.asarray(perm), cuts)
+
+
+@settings(max_examples=25, deadline=None)
+@given(partitions())
+def test_fed3r_partition_invariance(parts):
+    merged = fed3r.merge(*[_stats(p) for p in parts if len(p)])
+    ref = _stats(np.arange(len(_LABELS)))
+    np.testing.assert_allclose(np.asarray(merged.A), np.asarray(ref.A),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(merged.b), np.asarray(ref.b),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.permutations(list(range(6))))
+def test_fed3r_merge_order_invariance(order):
+    parts = np.array_split(np.arange(len(_LABELS)), 6)
+    stats = [_stats(p) for p in parts]
+    a = fed3r.merge(*stats)
+    b = fed3r.merge(*[stats[i] for i in order])
+    np.testing.assert_allclose(np.asarray(a.A), np.asarray(b.A), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(a.b), np.asarray(b.b), rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 100))
+def test_fed3r_merge_associativity(k, seed):
+    """merge(merge(a,b),c) == merge(a,merge(b,c)) — the psum-tree freedom."""
+    parts = np.array_split(np.arange(len(_LABELS)), k)
+    stats = [_stats(p) for p in parts]
+    rng = np.random.default_rng(seed)
+    # random binary merge tree vs flat merge
+    pool = list(stats)
+    while len(pool) > 1:
+        i, j = sorted(rng.choice(len(pool), size=2, replace=False))
+        b = pool.pop(j)
+        a = pool.pop(i)
+        pool.append(fed3r.merge(a, b))
+    flat = fed3r.merge(*stats)
+    np.testing.assert_allclose(np.asarray(pool[0].A), np.asarray(flat.A),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(partitions())
+def test_ncm_partition_invariance(parts):
+    merged = ncm.merge(*[
+        ncm.client_stats(jnp.asarray(_FEATS[p]), jnp.asarray(_LABELS[p]), C)
+        for p in parts if len(p)
+    ])
+    ref = ncm.client_stats(jnp.asarray(_FEATS), jnp.asarray(_LABELS), C)
+    np.testing.assert_allclose(np.asarray(merged.sums), np.asarray(ref.sums),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(merged.counts), np.asarray(ref.counts))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4096), st.integers(1, 512), st.integers(2, 5000))
+def test_cost_model_fed3r_cheaper_upstream_than_full_model(d, C_, b_scale):
+    """App. D: FED3R upstream (d²+dC) vs FedAvg (b+dC) — for realistic
+    extractor sizes (b ≫ d²) FED3R uploads less."""
+    cm = CostModel(b=float(d * d * b_scale), d=d, C=C_)
+    fed3r_up = cm.comm_per_client("fed3r")["up"]
+    fedavg_up = cm.comm_per_client("fedavg")["up"]
+    assert fed3r_up < fedavg_up or b_scale <= 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 20))
+def test_cost_model_cumulative_monotone(rounds):
+    cm = CostModel(b=2.2e6, d=64, C=10)
+    for alg in ("fedavg", "scaffold", "fedavg-lp", "fed3r"):
+        curve = cm.cumulative_comm_bytes(alg, rounds, 10)
+        assert len(curve) == rounds
+        assert np.all(np.diff(curve) >= 0) if rounds > 1 else True

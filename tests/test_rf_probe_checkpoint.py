@@ -1,0 +1,112 @@
+"""Random features, RR probe, checkpointing, optimizers, schedules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_checkpoint, load_pytree, save_pytree
+from repro.core import fed3r
+from repro.core.probe import probe_quality
+from repro.core.random_features import rbf_kernel, rff_init, rff_map
+from repro.data.synthetic import make_feature_dataset
+from repro.optim import adamw_init, adamw_update, apply_updates, sgd_init, sgd_update
+from repro.optim.schedules import cosine_decay, warmup_cosine
+
+
+def test_rff_approximates_rbf_kernel(rng):
+    """Fig. 8 mechanism: more features → better kernel approximation."""
+    d, sigma = 16, 2.0
+    z = jax.random.normal(rng, (64, d))
+    K = rbf_kernel(z, z, sigma)
+    errs = []
+    for D in (64, 512, 4096):
+        p = rff_init(jax.random.PRNGKey(1), d, D, sigma)
+        phi = rff_map(p, z)
+        errs.append(float(jnp.mean(jnp.abs(phi @ phi.T - K))))
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 0.03
+
+
+def test_rff_helps_on_nonlinear_data(rng):
+    """FED3R-RF > FED3R when classes aren't linearly separable (§4.2)."""
+    ds = make_feature_dataset(rng, 6000, 16, 6, nonlinear=True, noise=0.1,
+                              class_scale=1.0)
+    tr, te = 4800, 6000
+    f_tr, y_tr = ds.features[:tr], ds.labels[:tr]
+    f_te, y_te = ds.features[tr:te], ds.labels[tr:te]
+
+    W_lin = fed3r.solve(fed3r.client_stats(f_tr, y_tr, 6), 1.0)
+    acc_lin = float(fed3r.accuracy(W_lin, f_te, y_te))
+
+    p = rff_init(jax.random.PRNGKey(2), 16, 1024, sigma=5.0)
+    W_rf = fed3r.solve(fed3r.client_stats(rff_map(p, f_tr), y_tr, 6), 1.0)
+    acc_rf = float(fed3r.accuracy(W_rf, rff_map(p, f_te), y_te))
+    assert acc_rf > acc_lin + 0.2, (acc_lin, acc_rf)
+
+
+def test_probe_ranks_feature_quality(rng):
+    """§5.4: the RR probe scores clean features above noisy ones."""
+    ds = make_feature_dataset(rng, 2000, 24, 8, noise=0.3)
+    noisy = ds.features + 10.0 * jax.random.normal(jax.random.PRNGKey(9), ds.features.shape)
+    tr = 1600
+    good = probe_quality(ds.features[:tr], ds.labels[:tr],
+                         ds.features[tr:], ds.labels[tr:], 8)
+    bad = probe_quality(noisy[:tr], ds.labels[:tr], noisy[tr:], ds.labels[tr:], 8)
+    assert float(good.accuracy) > float(bad.accuracy) + 0.05
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    tree = {
+        "params": {"w": jax.random.normal(rng, (4, 5)), "b": jnp.zeros(5)},
+        "opt": {"mu": [jnp.ones(3), jnp.zeros((2, 2))], "t": jnp.asarray(7)},
+        "meta": {"none_leaf": None, "tup": (jnp.ones(2), jnp.zeros(1))},
+    }
+    path = os.path.join(tmp_path, "ckpt_3.npz")
+    save_pytree(path, tree)
+    back = load_pytree(path)
+    np.testing.assert_allclose(np.asarray(tree["params"]["w"]), back["params"]["w"])
+    assert isinstance(back["opt"]["mu"], list) and len(back["opt"]["mu"]) == 2
+    assert isinstance(back["meta"]["tup"], tuple)
+    assert back["meta"]["none_leaf"] is None
+    assert int(back["opt"]["t"]) == 7
+    assert latest_checkpoint(str(tmp_path)) == path
+
+
+# ---------------------------------------------------------------------------
+# optimizers / schedules
+# ---------------------------------------------------------------------------
+
+
+def test_sgd_momentum_accumulates():
+    params = {"w": jnp.ones(3)}
+    grads = {"w": jnp.ones(3)}
+    state = sgd_init(params, momentum=0.9)
+    u1, state = sgd_update(grads, state, params, 0.1, momentum=0.9)
+    u2, state = sgd_update(grads, state, params, 0.1, momentum=0.9)
+    assert float(jnp.abs(u2["w"][0])) > float(jnp.abs(u1["w"][0]))
+
+
+def test_adamw_decreases_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        updates, state = adamw_update(grads, state, params, 0.1)
+        params = apply_updates(params, updates)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.5
+
+
+def test_schedules_shapes():
+    s = warmup_cosine(1.0, 10, 100)
+    assert float(s(0)) < 0.2
+    assert abs(float(s(10)) - 1.0) < 1e-5
+    assert float(s(99)) < 0.5
+    cd = cosine_decay(2.0, 50)
+    assert abs(float(cd(0)) - 2.0) < 1e-5
