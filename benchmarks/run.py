@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to paper artifacts:
   bench_costs            App. D/E          exact cost meters @ paper scale
   bench_coupon           Table 7 / App. I  batch coupon collector
   bench_kernels          (kernels)         Pallas-vs-oracle + XLA timing
+  bench_engine           (engine)          packed scan vs per-client loop
   roofline               §Roofline         dry-run roofline table
 """
 from __future__ import annotations
@@ -24,6 +25,7 @@ MODULES = [
     "bench_costs",
     "bench_coupon",
     "bench_kernels",
+    "bench_engine",
     "bench_invariance",
     "bench_ncm",
     "bench_rf",

@@ -39,6 +39,31 @@ def init_stats(d: int, n_classes: int) -> Fed3RStats:
     )
 
 
+def masked_design(
+    features: jax.Array,  # (n, d) — φ(x), any float dtype
+    labels: jax.Array,  # (n,) int32
+    n_classes: int,
+    mask: Optional[jax.Array] = None,  # (n,) 1.0 = real sample, 0.0 = padding
+) -> tuple:
+    """Masked fp32 design matrices (Z, Y) and exact sample count n.
+
+    The single source of truth for the masking semantics of Eq. 5/6:
+    every statistics backend (XLA GEMMs here, the Pallas kernel in
+    repro.federated.engine) consumes these so padded rows contribute
+    exactly nothing to A, b, or n.
+    """
+    z = features.astype(jnp.float32)
+    y = jax.nn.one_hot(labels, n_classes, dtype=jnp.float32)
+    if mask is not None:
+        m = mask.astype(jnp.float32)[:, None]
+        z = z * m
+        y = y * m
+        n = jnp.sum(m)
+    else:
+        n = jnp.asarray(float(features.shape[0]), jnp.float32)
+    return z, y, n
+
+
 def client_stats(
     features: jax.Array,  # (n, d) — φ(x), any float dtype
     labels: jax.Array,  # (n,) int32
@@ -50,18 +75,8 @@ def client_stats(
     ``mask`` lets several clients share one padded batch (clients-per-shard
     batching in the distributed runtime) while keeping the sums exact.
     """
-    z = features.astype(jnp.float32)
-    if mask is not None:
-        z = z * mask.astype(jnp.float32)[:, None]
-    y = jax.nn.one_hot(labels, n_classes, dtype=jnp.float32)
-    if mask is not None:
-        y = y * mask.astype(jnp.float32)[:, None]
-    A = z.T @ z
-    b = z.T @ y
-    n = jnp.sum(mask.astype(jnp.float32)) if mask is not None else jnp.asarray(
-        float(features.shape[0]), jnp.float32
-    )
-    return Fed3RStats(A=A, b=b, n=n)
+    z, y, n = masked_design(features, labels, n_classes, mask)
+    return Fed3RStats(A=z.T @ z, b=z.T @ y, n=n)
 
 
 def merge(*stats: Fed3RStats) -> Fed3RStats:

@@ -1,15 +1,23 @@
-"""Client-side data pipeline: per-client views, batching, padding.
+"""Client-side data pipeline: per-client views, batching, padding, packing.
 
 ``FederatedDataset`` is the simulator's handle on a partitioned dataset:
-one global array store + per-client index lists (zero-copy views).  The
-distributed runtime instead consumes globally-sharded batches where each
-data shard carries a *group* of clients with a client-id mask (see
-federated/fed3r_driver.py).
+one global array store + per-client index lists (zero-copy views).
+
+Two packers turn ragged per-client data into fixed-shape device arrays:
+
+* :func:`pack_client_batches` — ONE client padded to a global
+  ``(epochs·n_batches, batch_size)`` grid; the gradient-FL local-update
+  shape (simulator round loop).
+* :func:`pack_client_shards` — MANY clients padded into
+  ``(n_shards, clients_per_shard, max_n, ...)`` with masks; the statistics
+  shape consumed by :mod:`repro.federated.engine`'s scan accumulation.
+  Packing is canonical (clients sorted by id) so downstream accumulation is
+  bitwise invariant to the order clients were sampled in.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +72,129 @@ class FederatedDataset:
         """Same underlying D, different federated split — the Fig. 1 probe."""
         parts = dirichlet_partition(rng, self.labels, n_clients, alpha)
         return FederatedDataset(self.features, self.labels, parts, self.n_classes)
+
+
+class PackedClients(NamedTuple):
+    """Clients packed into dense shard arrays for scan accumulation.
+
+    ``inputs``/``labels``/``mask`` share the leading
+    ``(n_shards, clients_per_shard, max_n)`` layout; ``mask`` is 1.0 on real
+    samples, 0.0 on padding.  Empty client slots (shard-count padding) have
+    ``client_ids == -1`` and an all-zero mask, so they contribute exactly
+    nothing to any masked statistic.
+    """
+
+    inputs: np.ndarray  # (S, P, N, ...) features or tokens
+    labels: np.ndarray  # (S, P, N) int32
+    mask: np.ndarray  # (S, P, N) float32
+    client_ids: np.ndarray  # (S, P) int32, -1 = empty slot
+
+    @property
+    def n_shards(self) -> int:
+        return self.inputs.shape[0]
+
+    @property
+    def clients_per_shard(self) -> int:
+        return self.inputs.shape[1]
+
+    @property
+    def n_clients(self) -> int:
+        return int((self.client_ids >= 0).sum())
+
+    @property
+    def n_samples(self) -> int:
+        return int(self.mask.sum())
+
+
+def pack_client_shards(
+    clients: Sequence[Tuple[np.ndarray, np.ndarray]],
+    clients_per_shard: int,
+    *,
+    client_ids: Optional[Sequence[int]] = None,
+    max_n: Optional[int] = None,
+    round_to: int = 8,
+    canonical_order: bool = True,
+) -> PackedClients:
+    """Pack ``[(inputs_k, labels_k), ...]`` into :class:`PackedClients`.
+
+    ``max_n`` (the per-client sample capacity) is rounded up to a multiple of
+    ``round_to`` so repeated rounds with slightly different client sizes hit
+    one jit trace.  Pass a dataset-global ``max_n`` to guarantee a single
+    trace across all rounds.  With ``canonical_order`` the clients are sorted
+    by id before packing, which makes the packed arrays — and therefore every
+    deterministic accumulation over them — invariant to sampling order.
+    """
+    if not clients:
+        raise ValueError("pack_client_shards: empty client list")
+    if clients_per_shard < 1:
+        raise ValueError(f"clients_per_shard must be >= 1, got {clients_per_shard}")
+    ids = np.arange(len(clients), dtype=np.int32) if client_ids is None else (
+        np.asarray(client_ids, np.int32)
+    )
+    if len(ids) != len(clients):
+        raise ValueError("client_ids length mismatch")
+    order = np.argsort(ids, kind="stable") if canonical_order else np.arange(len(ids))
+
+    sizes = [len(clients[i][1]) for i in order]
+    need = max(max(sizes), 1) if max_n is None else max_n
+    if max(sizes) > need:
+        raise ValueError(f"client with {max(sizes)} samples exceeds max_n={need}")
+    cap = -(-need // round_to) * round_to
+
+    n_slots = -(-len(clients) // clients_per_shard) * clients_per_shard
+    x0 = np.asarray(clients[order[0]][0])
+    inputs = np.zeros((n_slots, cap) + x0.shape[1:], x0.dtype)
+    labels = np.zeros((n_slots, cap), np.int32)
+    mask = np.zeros((n_slots, cap), np.float32)
+    slot_ids = np.full((n_slots,), -1, np.int32)
+    for slot, i in enumerate(order):
+        x, y = clients[i]
+        n_k = len(y)
+        inputs[slot, :n_k] = x
+        labels[slot, :n_k] = y
+        mask[slot, :n_k] = 1.0
+        slot_ids[slot] = ids[i]
+
+    n_shards = n_slots // clients_per_shard
+
+    def shard(a: np.ndarray) -> np.ndarray:
+        return a.reshape((n_shards, clients_per_shard) + a.shape[1:])
+
+    return PackedClients(
+        inputs=shard(inputs), labels=shard(labels), mask=shard(mask),
+        client_ids=slot_ids.reshape(n_shards, clients_per_shard),
+    )
+
+
+def pack_client_batches(
+    x: np.ndarray, y: np.ndarray, batch_size: int, n_batches: int, epochs: int,
+    rng: Optional[np.random.Generator] = None,
+) -> Dict[str, np.ndarray]:
+    """Pad one client's data to the global (epochs·n_batches, batch_size) grid.
+
+    The gradient-FL local-update shape: every client fills the same padded
+    grid (mask marks real samples) so one jitted ``local_update`` serves all
+    clients without retracing.  Each epoch reshuffles with ``rng``.
+    """
+    total = n_batches * batch_size
+    xs, ys, ms = [], [], []
+    for _ in range(epochs):
+        order = rng.permutation(len(y)) if rng is not None else np.arange(len(y))
+        xe = np.zeros((total,) + x.shape[1:], x.dtype)
+        ye = np.zeros((total,), y.dtype)
+        me = np.zeros((total,), np.float32)
+        k = min(len(y), total)
+        xe[:k] = x[order[:k]]
+        ye[:k] = y[order[:k]]
+        me[:k] = 1.0
+        xs.append(xe.reshape(n_batches, batch_size, *x.shape[1:]))
+        ys.append(ye.reshape(n_batches, batch_size))
+        ms.append(me.reshape(n_batches, batch_size))
+    return {
+        "x": np.concatenate(xs, 0),
+        "y": np.concatenate(ys, 0),
+        "mask": np.concatenate(ms, 0),
+    }
 
 
 def make_federated_features(

@@ -1,4 +1,11 @@
 from repro.federated.algorithms import FLAlgorithm, make_algorithm  # noqa: F401
+from repro.federated.engine import (  # noqa: F401
+    AccumulationEngine,
+    EngineConfig,
+    EngineStats,
+    aggregate,
+    shard_stats,
+)
 from repro.federated.sampling import ClientSampler  # noqa: F401
 from repro.federated.simulator import FLTask, run_federated  # noqa: F401
 from repro.federated.fed3r_driver import (  # noqa: F401

@@ -1,0 +1,199 @@
+"""Unified client-shard accumulation engine for FED3R statistics.
+
+Every consumer of Eq. 5/6 — the simulator drivers
+(:mod:`repro.federated.fed3r_driver`), the gradient-FL simulator and the
+datacenter path (:mod:`repro.launch.steps` / ``launch/train.py``) — funnels
+through this module instead of rolling its own padding + per-client
+dispatch loop:
+
+* :func:`shard_stats` — the fused masked (A, b, n) contraction for one
+  padded sample block, dispatching to the Pallas kernel
+  (:func:`repro.kernels.fed3r_stats`) on TPU (interpret mode in tests) and
+  the XLA reference GEMMs elsewhere.
+* :func:`aggregate` — the two server-aggregation backends behind one
+  interface: ``"merge"`` (simulator: the scan carry IS the merged sum) and
+  ``"psum"`` (mesh: all-reduce over the data axes inside shard_map).
+* :class:`AccumulationEngine` — packed accumulation over a
+  :class:`repro.data.pipeline.PackedClients`: ONE jitted ``lax.scan`` over
+  shards (donated accumulator buffers), an inner scan folding the clients of
+  each shard in canonical id order.  K sampled clients cost
+  ⌈K/clients_per_shard⌉ scan steps inside a single dispatch, vs the K jit
+  dispatches of the naive per-client loop.
+
+Exactness: per-client blocks have identical padded shapes, and the
+client fold is a strict left fold in sorted-id order regardless of how
+clients land in shards — so A and b are *bit-identical* under client
+reordering AND re-sharding (different ``clients_per_shard``), the paper's
+§4.3 invariance made exact rather than approximate.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fed3r, ncm
+from repro.core.fed3r import Fed3RStats
+from repro.core.random_features import RFFParams, rff_map
+from repro.data.pipeline import PackedClients
+from repro.kernels import fed3r_stats as fed3r_stats_kernel
+from repro.sharding.hints import hint
+
+
+def _resolve_use_kernel(use_kernel: Optional[bool]) -> bool:
+    # Auto: compiled Pallas on TPU; XLA GEMMs elsewhere (interpret mode is
+    # for validation, not production CPU throughput).
+    return jax.default_backend() == "tpu" if use_kernel is None else use_kernel
+
+
+def _ab(z: jax.Array, y: jax.Array, use_kernel: Optional[bool]):
+    """The (A, b) GEMM backend over masked design matrices."""
+    if _resolve_use_kernel(use_kernel):
+        return fed3r_stats_kernel(z, y)
+    return z.T @ z, z.T @ y
+
+
+def shard_stats(
+    features: jax.Array,  # (n, d) φ(x), any float dtype
+    labels: jax.Array,  # (n,) int
+    n_classes: int,
+    mask: Optional[jax.Array] = None,  # (n,) 1.0 real / 0.0 padding
+    *,
+    use_kernel: Optional[bool] = None,
+) -> Fed3RStats:
+    """Fused masked statistics of one padded sample block (Eq. 5/6)."""
+    z, y, n = fed3r.masked_design(features, labels, n_classes, mask)
+    A, b = _ab(z, y, use_kernel)
+    return Fed3RStats(A=A, b=b, n=n)
+
+
+def aggregate(
+    stats: Fed3RStats,
+    backend: str = "merge",
+    axis_names: Sequence[str] = (),
+) -> Fed3RStats:
+    """Server-aggregation backends behind one interface.
+
+    ``"merge"``: the associative Python/scan-level sum already produced the
+    global statistics — identity.  ``"psum"``: the mesh path; all-reduce the
+    local statistics over ``axis_names`` (valid inside shard_map/pmap only).
+    """
+    if backend == "merge":
+        return stats
+    if backend == "psum":
+        if not axis_names:
+            raise ValueError("psum aggregation needs at least one mesh axis")
+        return fed3r.aggregate_mesh(stats, tuple(axis_names))
+    raise ValueError(f"unknown aggregation backend: {backend!r}")
+
+
+class EngineStats(NamedTuple):
+    """Engine accumulator: ridge statistics + per-class sample counts.
+
+    ``class_counts`` rides along for free (one masked one-hot column sum per
+    client) and makes the NCM baseline a byproduct of the same pass:
+    ``NCMStats(sums=stats.b.T, counts=class_counts)``.
+    """
+
+    stats: Fed3RStats
+    class_counts: jax.Array  # (C,) fp32
+
+
+def engine_init(d: int, n_classes: int) -> EngineStats:
+    return EngineStats(
+        stats=fed3r.init_stats(d, n_classes),
+        class_counts=jnp.zeros((n_classes,), jnp.float32),
+    )
+
+
+def to_ncm_stats(acc: EngineStats) -> ncm.NCMStats:
+    """The FedNCM view of the accumulated statistics (sums = bᵀ)."""
+    return ncm.NCMStats(sums=acc.stats.b.T, counts=acc.class_counts)
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    n_classes: int
+    use_kernel: Optional[bool] = None  # None → auto (Pallas on TPU, XLA else)
+    donate: bool = True  # donate the accumulator buffers to the scan
+    aggregation: str = "merge"  # "merge" | "psum"
+    mesh_axes: Tuple[str, ...] = ()  # psum axes (aggregation="psum")
+
+
+class AccumulationEngine:
+    """Packed client-shard accumulation of FED3R statistics.
+
+    ``feature_fn(params, flat_inputs) -> (n, d)`` maps the packed raw inputs
+    of one shard (tokens, images, precomputed features — flattened to
+    ``(clients_per_shard·max_n, ...)``) to φ features *inside* the scan, so
+    backbone extraction batches over whole shards.  ``None`` means inputs
+    already are features.  ``rff_params`` fuses the FED3R-RF map into the
+    same scan.
+    """
+
+    def __init__(
+        self,
+        cfg: EngineConfig,
+        *,
+        feature_fn: Optional[Callable[[Any, jax.Array], jax.Array]] = None,
+        rff_params: Optional[RFFParams] = None,
+    ):
+        self.cfg = cfg
+        self.feature_fn = feature_fn
+        self.rff_params = rff_params
+        self.dispatches = 0  # host→device dispatch count (diagnostics/bench)
+        donate = (0,) if cfg.donate and jax.default_backend() != "cpu" else ()
+        self._accumulate = jax.jit(self._accumulate_impl, donate_argnums=donate)
+
+    def init(self, d: int) -> EngineStats:
+        return engine_init(d, self.cfg.n_classes)
+
+    # ---- jitted core ------------------------------------------------------
+
+    def _client_fold(self, acc: EngineStats, block) -> Tuple[EngineStats, None]:
+        """Fold one client's padded block into the accumulator."""
+        feats, labels, mask = block
+        z, y, n = fed3r.masked_design(feats, labels, self.cfg.n_classes, mask)
+        A, b = _ab(z, y, self.cfg.use_kernel)
+        return EngineStats(
+            stats=fed3r.merge(acc.stats, Fed3RStats(A=A, b=b, n=n)),
+            class_counts=acc.class_counts + jnp.sum(y, axis=0),
+        ), None
+
+    def _accumulate_impl(self, acc, inputs, labels, mask, params):
+        def shard_body(carry, shard):
+            x, y, m = shard  # (P, N, ...), (P, N), (P, N)
+            flat = x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+            # constrain the shard batch over the ambient mesh's data axes so
+            # feature extraction (the expensive leg) data-parallelizes when a
+            # mesh is set; exact no-op otherwise
+            flat = hint(flat, "batch")
+            feats = flat if self.feature_fn is None else self.feature_fn(params, flat)
+            if self.rff_params is not None:
+                feats = rff_map(self.rff_params, feats)
+            feats = feats.reshape(x.shape[:2] + feats.shape[1:])
+            carry, _ = jax.lax.scan(self._client_fold, carry, (feats, y, m))
+            return carry, None
+
+        acc, _ = jax.lax.scan(shard_body, acc, (inputs, labels, mask))
+        return EngineStats(
+            stats=aggregate(acc.stats, self.cfg.aggregation, self.cfg.mesh_axes),
+            class_counts=acc.class_counts,
+        )
+
+    # ---- host API ---------------------------------------------------------
+
+    def accumulate(
+        self, acc: EngineStats, packed: PackedClients, params: Any = None
+    ) -> EngineStats:
+        """Fold a packed client selection into the accumulator (one dispatch)."""
+        self.dispatches += 1
+        return self._accumulate(
+            acc,
+            jnp.asarray(packed.inputs),
+            jnp.asarray(packed.labels),
+            jnp.asarray(packed.mask),
+            params,
+        )

@@ -17,7 +17,13 @@ import numpy as np
 from repro.configs.base import Fed3RConfig, FederatedConfig
 from repro.core import calibration, fed3r, ncm
 from repro.core.random_features import RFFParams, rff_init, rff_map
-from repro.data.pipeline import FederatedDataset
+from repro.data.pipeline import FederatedDataset, pack_client_shards
+from repro.federated.engine import (
+    AccumulationEngine,
+    EngineConfig,
+    EngineStats,
+    to_ncm_stats,
+)
 from repro.federated.sampling import ClientSampler
 from repro.federated.simulator import FLTask, run_federated
 
@@ -32,6 +38,38 @@ class Fed3RHistory:
 
 def _default_extractor(x: np.ndarray) -> jax.Array:
     return jnp.asarray(x, jnp.float32)
+
+
+def _fresh_clients(sampled, seen: set) -> List[int]:
+    """Statistics of a client are sent exactly once: a resampled or
+    re-drawn client re-sends nothing (idempotent), in both sampling modes."""
+    fresh = [k for k in (int(k) for k in sampled) if k not in seen]
+    seen.update(fresh)
+    return fresh
+
+
+def _accumulate_round(
+    engine: AccumulationEngine,
+    acc: EngineStats,
+    dataset: FederatedDataset,
+    fresh: List[int],
+    extractor,
+    clients_per_shard: int,
+) -> EngineStats:
+    """Pack this round's unseen clients and fold them in (one dispatch).
+
+    The sample capacity is sized per call (bucketed by round_to=64) so tail
+    rounds with few/small fresh clients don't pay the dataset-global maximum
+    in padded FLOPs; each distinct bucket costs one jit trace.
+    """
+    clients = []
+    for k in fresh:
+        cd = dataset.client(k)
+        clients.append((np.asarray(extractor(cd.features)), cd.labels))
+    packed = pack_client_shards(
+        clients, clients_per_shard, client_ids=fresh, round_to=64
+    )
+    return engine.accumulate(acc, packed)
 
 
 def run_fed3r(
@@ -73,35 +111,37 @@ def run_fed3r(
         dataset.n_clients, fed_cfg.clients_per_round,
         replacement=fed_cfg.sample_with_replacement, seed=fed_cfg.seed,
     )
-    stats = fed3r.init_stats(d, C)
-    client_stats_j = jax.jit(
-        lambda f, y: fed3r.client_stats(f, y, C), static_argnums=()
+    # One engine serves the whole run: the RFF map fuses into the packed
+    # scan, so each round is a single dispatch over ⌈κ/clients_per_shard⌉
+    # shard steps instead of κ per-client jit calls.
+    engine = AccumulationEngine(
+        EngineConfig(n_classes=C), rff_params=rff_params if use_rf else None,
     )
+    acc = engine.init(d)
+    clients_per_shard = min(fed_cfg.clients_per_round, dataset.n_clients)
 
     hist = Fed3RHistory()
     n_rounds = fed_cfg.n_rounds or sampler.rounds_to_full_coverage()
-    seen_once = set()
+    seen_once: set = set()
     t0 = time.time()
     for rnd in range(n_rounds):
-        for k in sampler.sample():
-            k = int(k)
-            if not fed_cfg.sample_with_replacement and k in seen_once:
-                continue  # statistics of a client are sent exactly once
-            if fed_cfg.sample_with_replacement and k in seen_once:
-                continue  # resampled client re-sends nothing (idempotent)
-            seen_once.add(k)
-            cd = dataset.client(k)
-            stats = fed3r.merge(stats, client_stats_j(phi(cd.features), jnp.asarray(cd.labels)))
+        fresh = _fresh_clients(sampler.sample(), seen_once)
+        if fresh:
+            acc = _accumulate_round(
+                engine, acc, dataset, fresh, extractor, clients_per_shard
+            )
+        stats = acc.stats
         if (rnd + 1) % eval_every == 0 or rnd == n_rounds - 1 or len(seen_once) == dataset.n_clients:
             W = fed3r.solve(stats, f3_cfg.ridge_lambda, f3_cfg.normalize_classifier)
-            acc = float(fed3r.accuracy(W, test_phi, jnp.asarray(test_labels)))
+            test_acc = float(fed3r.accuracy(W, test_phi, jnp.asarray(test_labels)))
             hist.rounds.append(rnd + 1)
-            hist.accuracy.append(acc)
+            hist.accuracy.append(test_acc)
             hist.clients_seen.append(len(seen_once))
             hist.wall_time.append(time.time() - t0)
         if len(seen_once) == dataset.n_clients and not fed_cfg.sample_with_replacement:
             break  # exact convergence after ⌈K/κ⌉ rounds (paper §4.3)
 
+    stats = acc.stats
     W = fed3r.solve(stats, f3_cfg.ridge_lambda, f3_cfg.normalize_classifier)
     return W, stats, hist
 
@@ -114,21 +154,32 @@ def run_fedncm(
     *,
     extractor: Optional[Callable[[np.ndarray], jax.Array]] = None,
 ) -> Tuple[jax.Array, Fed3RHistory]:
-    """FedNCM baseline (Legate et al. 2023a) — Table 1/6 comparison."""
+    """FedNCM baseline (Legate et al. 2023a) — Table 1/6 comparison.
+
+    Runs on the same accumulation engine as FED3R: the NCM statistics
+    (per-class sums + counts) are a projection of the engine accumulator
+    (sums = bᵀ, counts = class_counts), so the baseline costs no second
+    statistics pass.
+    """
     extractor = extractor or _default_extractor
     C = dataset.n_classes
     d = int(extractor(dataset.features[:1]).shape[-1])
-    stats = ncm.init_stats(d, C)
+    engine = AccumulationEngine(EngineConfig(n_classes=C))
+    acc = engine.init(d)
     sampler = ClientSampler(dataset.n_clients, fed_cfg.clients_per_round, seed=fed_cfg.seed)
+    clients_per_shard = min(fed_cfg.clients_per_round, dataset.n_clients)
+    seen: set = set()
     hist = Fed3RHistory()
     for rnd in range(sampler.rounds_to_full_coverage()):
-        for k in sampler.sample():
-            cd = dataset.client(int(k))
-            stats = ncm.merge(stats, ncm.client_stats(extractor(cd.features), jnp.asarray(cd.labels), C))
-    W = ncm.solve(stats)
-    acc = float(ncm.accuracy(W, extractor(np.asarray(test_features)), jnp.asarray(test_labels)))
+        fresh = _fresh_clients(sampler.sample(), seen)
+        if fresh:
+            acc = _accumulate_round(
+                engine, acc, dataset, fresh, extractor, clients_per_shard
+            )
+    W = ncm.solve(to_ncm_stats(acc))
+    test_acc = float(ncm.accuracy(W, extractor(np.asarray(test_features)), jnp.asarray(test_labels)))
     hist.rounds.append(sampler.rounds_to_full_coverage())
-    hist.accuracy.append(acc)
+    hist.accuracy.append(test_acc)
     return W, hist
 
 

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FederatedConfig
-from repro.data.pipeline import FederatedDataset
+from repro.data.pipeline import FederatedDataset, pack_client_batches
 from repro.federated.algorithms import Server, make_algorithm, make_local_update
 from repro.federated.sampling import ClientSampler
 
@@ -51,32 +51,6 @@ class FLHistory:
             "coverage": self.coverage,
             "wall_time": self.wall_time,
         }
-
-
-def _pad_client_batches(
-    x: np.ndarray, y: np.ndarray, batch_size: int, n_batches: int, epochs: int,
-    rng: np.random.Generator,
-) -> Dict[str, np.ndarray]:
-    """Pad one client's data to (epochs*n_batches, batch_size, ...)."""
-    total = n_batches * batch_size
-    xs, ys, ms = [], [], []
-    for _ in range(epochs):
-        order = rng.permutation(len(y))
-        xe = np.zeros((total,) + x.shape[1:], x.dtype)
-        ye = np.zeros((total,), y.dtype)
-        me = np.zeros((total,), np.float32)
-        k = min(len(y), total)
-        xe[:k] = x[order[:k]]
-        ye[:k] = y[order[:k]]
-        me[:k] = 1.0
-        xs.append(xe.reshape(n_batches, batch_size, *x.shape[1:]))
-        ys.append(ye.reshape(n_batches, batch_size))
-        ms.append(me.reshape(n_batches, batch_size))
-    return {
-        "x": np.concatenate(xs, 0),
-        "y": np.concatenate(ys, 0),
-        "mask": np.concatenate(ms, 0),
-    }
 
 
 def run_federated(
@@ -115,7 +89,7 @@ def run_federated(
         results, cvar_deltas = [], []
         for k in chosen:
             cd = dataset.client(int(k))
-            batches = _pad_client_batches(
+            batches = pack_client_batches(
                 cd.features, cd.labels, cfg.local_batch_size, n_batches,
                 cfg.local_epochs, np_rng,
             )

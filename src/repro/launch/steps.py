@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import fed3r
 from repro.core.random_features import RFFParams, rff_map
+from repro.federated import engine as engine_lib
 from repro.models import model as model_lib
 
 
@@ -109,20 +110,41 @@ def make_fed3r_stats_step(
     cfg: ModelConfig,
     n_classes: int,
     rff_params: Optional[RFFParams] = None,
+    *,
+    aggregation: str = "merge",
+    mesh_axes: Tuple[str, ...] = (),
+    use_kernel: bool = False,
 ) -> Callable:
-    """(params, stats, batch{tokens..., class_labels}) -> stats'.
+    """(params, stats, batch{tokens..., class_labels[, mask]}) -> stats'.
 
-    One statistics mini-round: extract φ over the (data-sharded) batch,
-    optionally map through shared random features, accumulate A/b.  The
-    contraction over the batch dim is the paper's exact aggregation — GSPMD
-    lowers it to an all-reduce over ("pod", "data").
+    One statistics mini-round on the accumulation-engine core
+    (:func:`repro.federated.engine.shard_stats`): extract φ over the
+    (data-sharded) batch, optionally map through shared random features,
+    accumulate A/b.  ``aggregation`` selects the engine's server backend:
+
+    * ``"merge"`` (default) — the contraction over the batch dim is the
+      paper's exact aggregation; under jit GSPMD lowers it to an all-reduce
+      over ("pod", "data").
+    * ``"psum"`` — explicit all-reduce over ``mesh_axes``, for use inside
+      shard_map where the batch axes are manually partitioned.
+
+    An optional per-sample ``batch["mask"]`` supports clients-per-shard
+    packed batches (padding rows contribute exactly nothing).
+    ``use_kernel`` defaults to False here even on TPU: under GSPMD jit the
+    XLA contraction is what lowers to the hierarchical all-reduce; the
+    Pallas kernel has no partitioning rule, so opt in only inside shard_map
+    where the batch is already local.
     """
 
     def stats_step(params, stats: fed3r.Fed3RStats, batch) -> fed3r.Fed3RStats:
         feats = model_lib.extract_features(cfg, params, batch)
         if rff_params is not None:
             feats = rff_map(rff_params, feats)
-        new = fed3r.client_stats(feats, batch["class_labels"], n_classes)
+        new = engine_lib.shard_stats(
+            feats, batch["class_labels"], n_classes, batch.get("mask"),
+            use_kernel=use_kernel,
+        )
+        new = engine_lib.aggregate(new, aggregation, mesh_axes)
         return fed3r.merge(stats, new)
 
     return stats_step

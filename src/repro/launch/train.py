@@ -30,9 +30,11 @@ from repro.configs import get_config
 from repro.core import calibration, fed3r
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_token_dataset
-from repro.launch.mesh import data_axes, make_host_mesh
-from repro.launch.steps import make_fed3r_stats_step, make_train_step
+from repro.data.pipeline import pack_client_shards
+from repro.federated.engine import AccumulationEngine, EngineConfig
+from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
+from repro.sharding import compat
 
 
 def run(
@@ -53,7 +55,7 @@ def run(
     cfg = get_config(arch)
     model = build_model(cfg)
     mesh = make_host_mesh()
-    jax.set_mesh(mesh)
+    compat.set_mesh(mesh)
 
     rng = jax.random.PRNGKey(0)
     params = model.init(rng)
@@ -71,12 +73,23 @@ def run(
     W_head = None
     if use_fed3r_init:
         t0 = time.time()
-        stats_step = jax.jit(make_fed3r_stats_step(cfg, n_classes))
-        stats = fed3r.init_stats(cfg.d_feat, n_classes)
-        for k in range(n_clients):  # every client contributes exactly once
-            idx = parts[k]
-            batch = {"tokens": ds.tokens[idx], "class_labels": ds.labels[idx]}
-            stats = stats_step(params, stats, batch)
+        # Every client contributes exactly once.  The engine packs clients
+        # into shards and folds them in ONE jitted scan (backbone feature
+        # extraction batched per shard) — the datacenter-scale replacement
+        # for the former per-client stats_step dispatch loop.
+        engine = AccumulationEngine(
+            EngineConfig(n_classes=n_classes),
+            feature_fn=lambda p, toks: model.extract_features(
+                p, {"tokens": toks}
+            ),
+        )
+        tokens_np, labels_np = np.asarray(ds.tokens), np.asarray(ds.labels)
+        packed = pack_client_shards(
+            [(tokens_np[parts[k]], labels_np[parts[k]]) for k in range(n_clients)],
+            clients_per_shard=clients_per_round,
+        )
+        acc = engine.accumulate(engine.init(cfg.d_feat), packed, params)
+        stats = acc.stats
         W = fed3r.solve(stats, 0.01)
         feats_test = model.extract_features(params, {"tokens": test_tokens})
         acc = float(fed3r.accuracy(W, feats_test, test_labels))

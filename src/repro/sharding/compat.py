@@ -1,0 +1,86 @@
+"""Version-compat shims for the ambient-mesh API surface.
+
+The repo targets the modern ambient-mesh workflow (``jax.set_mesh`` +
+``jax.sharding.get_abstract_mesh``), but the pinned container ships a jax
+where neither symbol is public yet.  This module papers over the gap:
+
+* ``set_mesh(mesh)``   — public API when present; otherwise records the mesh
+  in a module-level slot (the repo's own ambient-mesh state).
+* ``get_abstract_mesh()`` — public API when present; otherwise checks, in
+  order, jax's internal ambient mesh, this module's slot, and the legacy
+  ``with mesh:`` thread-resource context.  Returns ``None`` when no mesh is
+  ambient, so callers get one uniform "no mesh ⇒ no-op" signal.
+* ``axis_sizes(mesh)`` / ``named_sharding(mesh, spec)`` — normalize over
+  concrete ``Mesh`` vs ``AbstractMesh`` return types.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Ambient mesh recorded by the set_mesh fallback (newest wins, like the
+# public global setter).
+_AMBIENT: List[object] = []
+
+
+def set_mesh(mesh: jax.sharding.Mesh) -> None:
+    """``jax.set_mesh`` when available, else record as the ambient mesh."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        setter(mesh)
+        return
+    _AMBIENT[:] = [mesh]
+
+
+def _nonempty(mesh) -> Optional[object]:
+    return mesh if mesh is not None and getattr(mesh, "axis_names", ()) else None
+
+
+def get_abstract_mesh():
+    """The ambient (abstract or concrete) mesh, or ``None`` if unset."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        return _nonempty(getter())
+    try:  # jax 0.4.x keeps the ambient mesh in an internal module
+        from jax._src import mesh as mesh_lib
+    except Exception:
+        mesh_lib = None
+    if mesh_lib is not None:
+        try:
+            m = _nonempty(mesh_lib.get_abstract_mesh())
+            if m is not None:
+                return m
+        except Exception:
+            pass
+    if _AMBIENT:
+        return _nonempty(_AMBIENT[-1])
+    if mesh_lib is not None:  # legacy ``with mesh:`` blocks
+        try:
+            pm = mesh_lib.thread_resources.env.physical_mesh
+            if pm is not None and not pm.empty:
+                return pm
+        except Exception:
+            pass
+    return None
+
+
+def axis_sizes(mesh) -> Dict[str, int]:
+    """{axis name: size} for a concrete Mesh or AbstractMesh."""
+    sizes = getattr(mesh, "axis_sizes", None)
+    if sizes is not None:
+        return dict(zip(mesh.axis_names, sizes))
+    return dict(getattr(mesh, "shape", {}))
+
+
+def sharding_for(mesh, spec: P):
+    """What to hand ``with_sharding_constraint`` for this mesh flavor.
+
+    A concrete Mesh needs an explicit NamedSharding on older jax (a bare
+    PartitionSpec only resolves once specs-carrying ambient meshes exist);
+    an AbstractMesh resolves the spec itself.
+    """
+    if isinstance(mesh, jax.sharding.Mesh):
+        return jax.sharding.NamedSharding(mesh, spec)
+    return spec

@@ -9,9 +9,10 @@ MoE dispatch buffers).  ``hint(x, *tokens)`` places an explicit
     "model"  -> sharded over the tensor-parallel axis when divisible
     None     -> unconstrained... replicated along that dim
 
-Hints resolve against the *ambient* abstract mesh (``jax.set_mesh``); when no
-mesh is set (unit tests, the CPU simulator) they are exact no-ops, so model
-code stays mesh-agnostic.
+Hints resolve against the *ambient* abstract mesh (``jax.set_mesh``, via the
+version-compat layer in :mod:`repro.sharding.compat`); when no mesh is set
+(unit tests, the CPU simulator) they are exact no-ops, so model code stays
+mesh-agnostic.
 """
 from __future__ import annotations
 
@@ -19,6 +20,8 @@ from typing import Optional, Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P
+
+from repro.sharding import compat
 
 
 def _resolve(shape, tokens, axis_names, axis_sizes):
@@ -51,11 +54,11 @@ def _resolve(shape, tokens, axis_names, axis_sizes):
 
 def data_shards() -> int:
     """Product of the non-"model" (batch-carrying) mesh axis sizes; 1 if none."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
+    mesh = compat.get_abstract_mesh()
+    if mesh is None:
         return 1
     s = 1
-    for name, size in zip(mesh.axis_names, mesh.axis_sizes):
+    for name, size in compat.axis_sizes(mesh).items():
         if name != "model":
             s *= size
     return s
@@ -63,18 +66,19 @@ def data_shards() -> int:
 
 def mesh_axis_size(name: str) -> int:
     """Size of an ambient-mesh axis (1 when no mesh is set)."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
+    mesh = compat.get_abstract_mesh()
+    if mesh is None:
         return 1
-    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
-    return sizes.get(name, 1)
+    return compat.axis_sizes(mesh).get(name, 1)
 
 
 def hint(x: jax.Array, *tokens) -> jax.Array:
     """Constrain ``x``'s sharding by logical dim tokens; no-op without mesh."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
+    mesh = compat.get_abstract_mesh()
+    if mesh is None:
         return x
-    axis_sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
-    spec = _resolve(x.shape, tokens, mesh.axis_names, axis_sizes)
-    return jax.lax.with_sharding_constraint(x, spec)
+    axis_sizes = compat.axis_sizes(mesh)
+    spec = _resolve(x.shape, tokens, tuple(mesh.axis_names), axis_sizes)
+    if all(entry is None for entry in spec):
+        return x  # fully replicated constraint ⇒ exact no-op
+    return jax.lax.with_sharding_constraint(x, compat.sharding_for(mesh, spec))

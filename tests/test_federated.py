@@ -61,6 +61,22 @@ def test_fed3r_split_invariance_via_driver(fed_data):
     assert max(accs) - min(accs) < 1e-6
 
 
+def test_fed3r_resampled_client_sends_exactly_once(fed_data):
+    """Regression for the seen-once dedup (formerly two identical branches):
+    with-replacement sampling re-draws clients, but each client's statistics
+    enter the sum exactly once — stats equal the centralized pass and ``n``
+    counts every sample once."""
+    fed, test = fed_data
+    f3 = Fed3RConfig(n_classes=C)
+    cfg = _fc(sample_with_replacement=True, n_rounds=60)
+    W, stats, hist = run_fed3r(fed, test.features, test.labels, f3, cfg)
+    assert hist.clients_seen[-1] == N_CLIENTS  # coupon collector finished
+    cen = fed3r.client_stats(jnp.asarray(fed.features), jnp.asarray(fed.labels), C)
+    np.testing.assert_allclose(np.asarray(stats.A), np.asarray(cen.A),
+                               rtol=1e-4, atol=1e-4)
+    assert float(stats.n) == len(fed.labels)
+
+
 def test_fed3r_beats_fedncm(fed_data):
     fed, test = fed_data
     f3 = Fed3RConfig(n_classes=C)

@@ -7,7 +7,10 @@ merge tree shape, the statistics (and hence W*) are identical.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import fed3r, ncm
 from repro.federated.costs import CostModel
