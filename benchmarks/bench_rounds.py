@@ -1,0 +1,147 @@
+"""Batched cohort round engine vs per-client round loop (gradient FL).
+
+The claim under test (ISSUE 2 acceptance): a K-client FedAvg-family round
+costs ONE jitted dispatch through the round engine — vmapped local updates
+over the packed cohort, on-device weighted aggregation, server optimizer
+step — vs the seed-era loop's K local-update dispatches + host-side Python
+aggregation + 1 server dispatch (K+1).  And the engine matches the
+per-client reference for fedavg / fedprox / scaffold within fp tolerance.
+
+Same protocol as bench_engine.py, on the Fed3R+FT side of the paper.
+
+Usage: PYTHONPATH=src:. python benchmarks/bench_rounds.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.data.pipeline import pack_cohort_batches
+from repro.federated.algorithms import make_algorithm
+from repro.federated.round_engine import ReferenceLoop, RoundConfig, RoundEngine
+from repro.federated.sampling import sample_round
+from repro.federated.simulator import linear_head_task
+
+K = 48  # clients in the federation
+COHORT = 16  # clients sampled per round
+D_FEAT = 32
+N_CLASSES = 10
+BATCH = 16
+N_BATCHES = 5  # ⌈80 / BATCH⌉
+
+
+def _make_federation(n_lo=20, n_hi=80, seed=0):
+    rng = np.random.default_rng(seed)
+    clients = []
+    for _ in range(K):
+        n = int(rng.integers(n_lo, n_hi))
+        clients.append((
+            rng.normal(size=(n, D_FEAT)).astype(np.float32),
+            rng.integers(0, N_CLASSES, size=n).astype(np.int32),
+        ))
+    return clients
+
+
+def _task(clients):
+    test_x = np.concatenate([x for x, _ in clients])[:256]
+    test_y = np.concatenate([y for _, y in clients])[:256]
+    return linear_head_task(D_FEAT, N_CLASSES, test_x, test_y)
+
+
+def _cohorts(clients, rounds, seed=0):
+    out = []
+    for rnd in range(rounds):
+        chosen = sample_round(K, COHORT, rnd, seed=seed)
+        out.append(pack_cohort_batches(
+            [clients[int(c)] for c in chosen], BATCH, N_BATCHES,
+            client_ids=chosen, seed=(seed, rnd),
+        ))
+    return out
+
+
+def _run(loop, task, cohorts, reps):
+    """Time ``reps`` repetitions of the round sequence (post-warmup)."""
+    state = loop.init(task.params0)
+    for cohort in cohorts:  # warm every trace
+        state = loop.step(state, cohort)
+    jax.block_until_ready(state.params)
+    loop.dispatches = 0
+    t0 = time.time()
+    for _ in range(reps):
+        state = loop.init(task.params0)
+        for cohort in cohorts:
+            state = loop.step(state, cohort)
+        jax.block_until_ready(state.params)
+    per_round = (time.time() - t0) / (reps * len(cohorts))
+    return state, loop.dispatches // (reps * len(cohorts)), per_round
+
+
+def main(smoke: bool = False) -> dict:
+    reps = 1 if smoke else 5
+    rounds = 2 if smoke else 5
+    clients = _make_federation()
+    task = _task(clients)
+    cohorts = _cohorts(clients, rounds)
+
+    # parity: engine == per-client reference for the heterogeneity baselines
+    parity = {}
+    for name in ("fedavg", "fedprox", "scaffold"):
+        rc = RoundConfig(algo=make_algorithm(name), client_lr=0.05,
+                         n_total_clients=K)
+        eng = RoundEngine(rc, task.per_example_loss, task.freeze)
+        ref = ReferenceLoop(rc, task.per_example_loss, task.freeze)
+        se, sr = eng.init(task.params0), ref.init(task.params0)
+        for cohort in cohorts:
+            se, sr = eng.step(se, cohort), ref.step(sr, cohort)
+        err = max(
+            float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+            for a, b in zip(jax.tree.leaves(se.params), jax.tree.leaves(sr.params))
+        )
+        parity[name] = err
+        assert err < 1e-4, f"{name}: engine/reference divergence {err}"
+
+    # timing: the fedavg round sequence, engine vs per-client loop
+    rc = RoundConfig(algo=make_algorithm("fedavg"), client_lr=0.05,
+                     n_total_clients=K)
+    _, ref_disp, ref_s = _run(
+        ReferenceLoop(rc, task.per_example_loss, task.freeze), task, cohorts, reps
+    )
+    _, eng_disp, eng_s = _run(
+        RoundEngine(rc, task.per_example_loss, task.freeze), task, cohorts, reps
+    )
+
+    speedup = ref_s / eng_s if eng_s > 0 else float("inf")
+    emit(
+        "rounds_reference_loop", ref_s * 1e6,
+        f"K={COHORT} dispatches_per_round={ref_disp}",
+    )
+    emit(
+        "rounds_packed_engine", eng_s * 1e6,
+        f"K={COHORT} dispatches_per_round={eng_disp} speedup={speedup:.1f}x "
+        f"parity_max_err={max(parity.values()):.2e}",
+    )
+
+    assert eng_disp == 1, f"engine must cost 1 dispatch/round, got {eng_disp}"
+    assert ref_disp == COHORT + 1, f"reference should cost K+1, got {ref_disp}"
+    return {
+        "reference_s_per_round": ref_s,
+        "engine_s_per_round": eng_s,
+        "speedup": speedup,
+        "reference_dispatches_per_round": ref_disp,
+        "engine_dispatches_per_round": eng_disp,
+        "parity_max_err": parity,
+        "cohort": COHORT,
+        "rounds": rounds,
+    }
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small config (CI budget)")
+    args = ap.parse_args()
+    out = main(smoke=args.smoke)
+    print(out)

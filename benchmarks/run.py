@@ -13,10 +13,15 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to paper artifacts:
   bench_coupon           Table 7 / App. I  batch coupon collector
   bench_kernels          (kernels)         Pallas-vs-oracle + XLA timing
   bench_engine           (engine)          packed scan vs per-client loop
+  bench_rounds           (round engine)    packed FL round vs per-client loop
   roofline               §Roofline         dry-run roofline table
+
+Modules listed in ``JSON_OUT`` additionally persist their result dict as a
+``BENCH_<name>.json`` next to the invocation — the perf trajectory record.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 import traceback
@@ -26,6 +31,7 @@ MODULES = [
     "bench_coupon",
     "bench_kernels",
     "bench_engine",
+    "bench_rounds",
     "bench_invariance",
     "bench_ncm",
     "bench_rf",
@@ -35,6 +41,9 @@ MODULES = [
     "bench_feature_quality",
     "roofline",
 ]
+
+# result dicts persisted as BENCH_<suffix>.json (perf trajectory record)
+JSON_OUT = {"bench_rounds": "rounds"}
 
 
 def main() -> None:
@@ -47,7 +56,10 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main()
+            result = mod.main()
+            if name in JSON_OUT and isinstance(result, dict):
+                with open(f"BENCH_{JSON_OUT[name]}.json", "w") as f:
+                    json.dump(result, f, indent=2, default=float)
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception as e:  # noqa: BLE001 — keep the harness running
             failures.append(name)

@@ -3,11 +3,16 @@
 ``FederatedDataset`` is the simulator's handle on a partitioned dataset:
 one global array store + per-client index lists (zero-copy views).
 
-Two packers turn ragged per-client data into fixed-shape device arrays:
+Three packers turn ragged per-client data into fixed-shape device arrays:
 
 * :func:`pack_client_batches` — ONE client padded to a global
   ``(epochs·n_batches, batch_size)`` grid; the gradient-FL local-update
-  shape (simulator round loop).
+  shape (per-client reference path).
+* :func:`pack_cohort_batches` — a SAMPLED COHORT of clients stacked into
+  ``(cohort, epochs·n_batches, batch_size, ...)`` arrays with masks; the
+  shape :mod:`repro.federated.round_engine` vmaps one whole FL round over.
+  Canonical id order + per-(seed, client) shuffling make the packed arrays
+  bitwise invariant to the order the cohort was sampled in.
 * :func:`pack_client_shards` — MANY clients padded into
   ``(n_shards, clients_per_shard, max_n, ...)`` with masks; the statistics
   shape consumed by :mod:`repro.federated.engine`'s scan accumulation.
@@ -195,6 +200,93 @@ def pack_client_batches(
         "y": np.concatenate(ys, 0),
         "mask": np.concatenate(ms, 0),
     }
+
+
+class PackedCohort(NamedTuple):
+    """A sampled cohort packed for one vmapped FL round.
+
+    ``x``/``y``/``mask`` share the leading ``(cohort, n_steps, batch_size)``
+    layout (``n_steps = epochs·n_batches``); ``mask`` is 1.0 on real samples,
+    0.0 on padding.  Padded cohort slots have ``client_ids == -1`` and an
+    all-zero mask, so their local update is an exact no-op with aggregation
+    weight 0.
+    """
+
+    x: np.ndarray  # (K, n_steps, B, ...) features or tokens
+    y: np.ndarray  # (K, n_steps, B) int32
+    mask: np.ndarray  # (K, n_steps, B) float32
+    client_ids: np.ndarray  # (K,) int32, -1 = padded slot
+
+    @property
+    def cohort(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def n_clients(self) -> int:
+        return int((self.client_ids >= 0).sum())
+
+    @property
+    def n_samples(self) -> int:
+        return int(self.mask.sum())
+
+    def batches(self) -> Dict[str, np.ndarray]:
+        """The stacked batch dict the round engine's vmapped update eats."""
+        return {"x": self.x, "y": self.y, "mask": self.mask}
+
+
+def pack_cohort_batches(
+    clients: Sequence[Tuple[np.ndarray, np.ndarray]],
+    batch_size: int,
+    n_batches: int,
+    epochs: int = 1,
+    *,
+    client_ids: Optional[Sequence[int]] = None,
+    seed: Optional[Sequence[int]] = None,
+    cohort_size: Optional[int] = None,
+    canonical_order: bool = True,
+) -> PackedCohort:
+    """Stack ``[(x_k, y_k), ...]`` into a :class:`PackedCohort`.
+
+    Each client is padded through :func:`pack_client_batches` onto the same
+    ``(epochs·n_batches, batch_size)`` grid, then the cohort is stacked on a
+    new leading axis — the dimension the round engine vmaps ``local_update``
+    over.  With ``canonical_order`` clients are sorted by id, and each
+    client's epoch shuffles draw from ``default_rng((*seed, client_id))`` —
+    a pure function of (seed, id), never of cohort position — so the packed
+    arrays (and therefore the whole aggregated round) are bitwise invariant
+    to sampling order.  ``cohort_size`` pads the cohort with empty slots
+    (``client_ids == -1``, zero mask) up to a fixed vmap width.
+    """
+    if not clients:
+        raise ValueError("pack_cohort_batches: empty cohort")
+    ids = np.arange(len(clients), dtype=np.int32) if client_ids is None else (
+        np.asarray(client_ids, np.int32)
+    )
+    if len(ids) != len(clients):
+        raise ValueError("client_ids length mismatch")
+    K = len(clients) if cohort_size is None else cohort_size
+    if K < len(clients):
+        raise ValueError(f"cohort_size={K} < {len(clients)} clients")
+    order = np.argsort(ids, kind="stable") if canonical_order else np.arange(len(ids))
+
+    n_steps = epochs * n_batches
+    x0 = np.asarray(clients[order[0]][0])
+    xs = np.zeros((K, n_steps, batch_size) + x0.shape[1:], x0.dtype)
+    ys = np.zeros((K, n_steps, batch_size), np.int32)
+    ms = np.zeros((K, n_steps, batch_size), np.float32)
+    slot_ids = np.full((K,), -1, np.int32)
+    for slot, i in enumerate(order):
+        x, y = clients[i]
+        rng = (
+            np.random.default_rng(tuple(seed) + (int(ids[i]),))
+            if seed is not None else None
+        )
+        b = pack_client_batches(
+            np.asarray(x), np.asarray(y), batch_size, n_batches, epochs, rng
+        )
+        xs[slot], ys[slot], ms[slot] = b["x"], b["y"], b["mask"]
+        slot_ids[slot] = ids[i]
+    return PackedCohort(x=xs, y=ys, mask=ms, client_ids=slot_ids)
 
 
 def make_federated_features(

@@ -1,4 +1,12 @@
-from repro.federated.algorithms import FLAlgorithm, make_algorithm  # noqa: F401
+from repro.federated.algorithms import (  # noqa: F401
+    FLAlgorithm,
+    ServerState,
+    make_algorithm,
+    make_local_update,
+    server_init,
+    server_optimizer_step,
+    server_state_from_tree,
+)
 from repro.federated.engine import (  # noqa: F401
     AccumulationEngine,
     EngineConfig,
@@ -6,7 +14,12 @@ from repro.federated.engine import (  # noqa: F401
     aggregate,
     shard_stats,
 )
-from repro.federated.sampling import ClientSampler  # noqa: F401
+from repro.federated.round_engine import (  # noqa: F401
+    ReferenceLoop,
+    RoundConfig,
+    RoundEngine,
+)
+from repro.federated.sampling import ClientSampler, sample_round  # noqa: F401
 from repro.federated.simulator import FLTask, run_federated  # noqa: F401
 from repro.federated.fed3r_driver import (  # noqa: F401
     run_fed3r,

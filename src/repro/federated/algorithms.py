@@ -1,6 +1,7 @@
-"""Gradient-based FL algorithms: FedAvg, FedAvgM, FedProx, Scaffold (+ LP).
+"""Gradient-based FL algorithms as PURE state transitions.
 
-All four share one jitted ``local_update``:
+FedAvg, FedAvgM, FedProx, Scaffold, FedAdam, FedYogi share one pure
+``local_update`` (built by :func:`make_local_update`):
 
 * local SGD over padded client batches (padding batches are exact no-ops);
 * optional proximal term (FedProx: + μ/2‖θ−θ_g‖²);
@@ -9,14 +10,23 @@ All four share one jitted ``local_update``:
 * a ``freeze`` mask (pytree of 0/1) implementing the LP variants and the
   FED3R+FT strategies: FT (all 1), FT-LP (extractor 0), FT-FEAT (head 0).
 
-Server side: weighted-average of client deltas, then a server optimizer
-step (SGD; momentum > 0 gives FedAvgM, Hsu et al. 2019).
+The server is a :class:`ServerState` pytree (params, momentum buffer,
+adaptive m/v/t, the Scaffold server variate, the STACKED per-client
+variates, round index) advanced by pure functions — no Python-object
+state, so the whole round (vmapped local updates + aggregation + server
+optimizer step + cvar scatter) lowers into ONE jitted dispatch inside
+:mod:`repro.federated.round_engine`, the state checkpoints through
+:mod:`repro.checkpoint` as a plain pytree, and training is resumable at
+any round boundary.
+
+Server optimizers: weighted-average of client deltas, then SGD (momentum
+> 0 gives FedAvgM, Hsu et al. 2019) or Adam/Yogi treating the aggregated
+delta as a pseudo-gradient (Reddi et al. 2021).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +46,10 @@ class FLAlgorithm:
     server_momentum: float
     server_opt: str = "sgd"  # sgd | adam | yogi (Reddi et al. 2021)
 
+    @property
+    def adaptive(self) -> bool:
+        return self.server_opt in ("adam", "yogi")
+
 
 def make_algorithm(
     name: str, *, prox_mu: float = 0.01, server_momentum: float = 0.9
@@ -50,9 +64,9 @@ def make_algorithm(
     if name == "scaffold":
         return FLAlgorithm("scaffold", True, 0.0, 0.0)
     if name == "fedadam":
-        return FLAlgorithm("fedadam", False, 0.0, 0.9, server_opt="adam")
+        return FLAlgorithm("fedadam", False, 0.0, 0.0, server_opt="adam")
     if name == "fedyogi":
-        return FLAlgorithm("fedyogi", False, 0.0, 0.9, server_opt="yogi")
+        return FLAlgorithm("fedyogi", False, 0.0, 0.0, server_opt="yogi")
     raise ValueError(name)
 
 
@@ -67,12 +81,16 @@ def make_local_update(
     *,
     lr: float,
     weight_decay: float = 0.0,
+    jit: bool = True,
 ):
-    """Build the jitted local-update fn.
+    """Build the local-update fn (jitted unless ``jit=False``).
 
     Batches arrive padded to a fixed shape: ``batches`` is a dict of arrays
     with leading dims (n_batches, batch_size, ...) plus ``mask``
     (n_batches, batch_size).  Empty padding batches contribute exactly zero.
+
+    The un-jitted form (``jit=False``) is what the round engine vmaps over
+    the cohort dimension; the jitted form is the per-client reference path.
     """
 
     def masked_loss(params, batch):
@@ -80,10 +98,7 @@ def make_local_update(
         m = batch["mask"].astype(jnp.float32)
         return jnp.sum(per * m) / jnp.maximum(jnp.sum(m), 1.0)
 
-    @functools.partial(jax.jit, static_argnames=())
     def local_update(global_params, batches, freeze, c_server, c_client):
-        n_batches = jax.tree.leaves(batches)[0].shape[0]
-
         def step(params, batch):
             has = (jnp.sum(batch["mask"]) > 0).astype(jnp.float32)
             grads = jax.grad(masked_loss)(params, batch)
@@ -104,10 +119,7 @@ def make_local_update(
             )
             return params, None
 
-        def body(params, batch):
-            return step(params, batch)
-
-        params, _ = jax.lax.scan(body, global_params, batches)
+        params, _ = jax.lax.scan(step, global_params, batches)
 
         delta = jax.tree.map(lambda p, p0, f: (p - p0) * f, params, global_params, freeze)
         n_eff = jnp.sum(batches["mask"])
@@ -126,100 +138,131 @@ def make_local_update(
             new_c = c_client
         return LocalResult(delta=delta, n_samples=n_eff, new_cvar=new_c)
 
-    return local_update
+    return jax.jit(local_update) if jit else local_update
 
 
 # ---------------------------------------------------------------------------
-# server aggregation
+# server state + pure transitions
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("server_momentum_on",))
-def _server_step(params, weighted_deltas, weights_sum, momentum_buf, slr, smom,
-                 server_momentum_on: bool):
-    avg_delta = jax.tree.map(lambda d: d / weights_sum, weighted_deltas)
-    if server_momentum_on:
-        momentum_buf = jax.tree.map(
-            lambda m, d: smom * m + d, momentum_buf, avg_delta
-        )
-        step = momentum_buf
-    else:
-        step = avg_delta
-    params = jax.tree.map(lambda p, s: p + slr * s, params, step)
-    return params, momentum_buf
+class ServerState(NamedTuple):
+    """The complete FedAvg-family server as one checkpointable pytree.
+
+    Unused slots are ``None`` (e.g. ``momentum`` for plain FedAvg,
+    ``cvars`` for everything but Scaffold) so the structure stays minimal
+    per algorithm while remaining a valid jit/donation target.
+    """
+
+    params: Any
+    momentum: Any  # server momentum buffer (FedAvgM) or None
+    opt_m: Any  # Adam/Yogi first moment or None
+    opt_v: Any  # Adam/Yogi second moment or None
+    opt_t: jax.Array  # () int32 adaptive step counter
+    c_server: Any  # Scaffold server control variate or None
+    cvars: Any  # STACKED (n_clients, ...) client variates or None
+    round: jax.Array  # () int32 — rounds applied so far
 
 
-@functools.partial(jax.jit, static_argnames=("yogi",))
-def _adaptive_server_step(params, avg_delta, m, v, t, slr, yogi: bool,
-                          b1=0.9, b2=0.99, eps=1e-3):
-    """FedAdam / FedYogi (Reddi et al. 2021): adaptive server optimizer
-    treating the aggregated client delta as a pseudo-gradient."""
-    t = t + 1
-    m = jax.tree.map(lambda m_, d: b1 * m_ + (1 - b1) * d, m, avg_delta)
-    if yogi:
-        v = jax.tree.map(
-            lambda v_, d: v_ - (1 - b2) * jnp.square(d) * jnp.sign(v_ - jnp.square(d)),
-            v, avg_delta,
-        )
-    else:
-        v = jax.tree.map(lambda v_, d: b2 * v_ + (1 - b2) * jnp.square(d), v, avg_delta)
-    params = jax.tree.map(
-        lambda p, m_, v_: p + slr * m_ / (jnp.sqrt(jnp.maximum(v_, 0.0)) + eps),
-        params, m, v,
+def server_init(
+    algo: FLAlgorithm, params0: Any, *, n_clients: int = 0
+) -> ServerState:
+    """Fresh server state.  ``n_clients`` sizes the stacked Scaffold
+    variates (required iff ``algo.uses_cvar``).
+
+    ``params0`` is COPIED: the state is a donation target (the round
+    engine's dispatch consumes its buffers on accelerators), so it must
+    own its arrays rather than alias caller-held ones.
+    """
+    if algo.uses_cvar and n_clients < 1:
+        raise ValueError("scaffold needs n_clients to size the stacked cvars")
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params0)  # noqa: E731
+    return ServerState(
+        params=jax.tree.map(jnp.array, params0),
+        momentum=zeros() if algo.server_momentum > 0 else None,
+        opt_m=zeros() if algo.adaptive else None,
+        opt_v=jax.tree.map(lambda p: jnp.full(p.shape, 1e-6), params0)
+        if algo.adaptive else None,
+        opt_t=jnp.zeros((), jnp.int32),
+        c_server=zeros() if algo.uses_cvar else None,
+        cvars=jax.tree.map(
+            lambda p: jnp.zeros((n_clients,) + p.shape, p.dtype), params0
+        ) if algo.uses_cvar else None,
+        round=jnp.zeros((), jnp.int32),
     )
-    return params, m, v, t
 
 
-class Server:
-    """FedAvg-family server: weighted delta aggregation + server optimizer."""
+def server_state_from_tree(tree: Dict[str, Any]) -> ServerState:
+    """Rewrap a checkpoint-restored dict (NamedTuples round-trip as dicts)."""
+    return ServerState(**{f: tree[f] for f in ServerState._fields})
 
-    def __init__(self, algo: FLAlgorithm, params, *, server_lr: float = 1.0):
-        self.algo = algo
-        self.params = params
-        self.server_lr = server_lr
-        self.momentum_buf = (
-            jax.tree.map(jnp.zeros_like, params) if algo.server_momentum > 0 else None
-        )
-        self.c_server = (
-            jax.tree.map(jnp.zeros_like, params) if algo.uses_cvar else None
-        )
-        self.adaptive = algo.server_opt in ("adam", "yogi")
-        if self.adaptive:
-            self.m = jax.tree.map(jnp.zeros_like, params)
-            self.v = jax.tree.map(lambda p: jnp.full(p.shape, 1e-6), params)
-            self.t = jnp.zeros((), jnp.int32)
 
-    def aggregate(self, results, n_total_clients: Optional[int] = None,
-                  cvar_deltas: Optional[list] = None):
-        weights = jnp.asarray([float(r.n_samples) for r in results], jnp.float32)
-        wsum = jnp.sum(weights)
-        weighted = jax.tree.map(
-            lambda *ds: sum(w * d for w, d in zip(weights, ds)), *[r.delta for r in results]
-        )
-        if self.adaptive:
-            avg_delta = jax.tree.map(lambda d: d / wsum, weighted)
-            self.params, self.m, self.v, self.t = _adaptive_server_step(
-                self.params, avg_delta, self.m, self.v, self.t,
-                jnp.asarray(self.server_lr, jnp.float32),
-                self.algo.server_opt == "yogi",
+def server_optimizer_step(
+    algo: FLAlgorithm,
+    state: ServerState,
+    avg_delta: Any,
+    *,
+    server_lr: float,
+    b1: float = 0.9,
+    b2: float = 0.99,
+    eps: float = 1e-3,
+) -> ServerState:
+    """Apply ONE server optimizer step to the weighted-average delta.
+
+    Pure and trace-safe: called inside the round engine's single jitted
+    dispatch, and by the per-client reference loop.  Does not touch the
+    Scaffold fields or the round counter (see :func:`scaffold_update` /
+    the engine for those).
+    """
+    slr = jnp.asarray(server_lr, jnp.float32)
+    if algo.adaptive:
+        t = state.opt_t + 1
+        m = jax.tree.map(lambda m_, d: b1 * m_ + (1 - b1) * d, state.opt_m, avg_delta)
+        if algo.server_opt == "yogi":
+            v = jax.tree.map(
+                lambda v_, d: v_ - (1 - b2) * jnp.square(d) * jnp.sign(v_ - jnp.square(d)),
+                state.opt_v, avg_delta,
             )
         else:
-            mom = self.momentum_buf if self.momentum_buf is not None else jax.tree.map(
-                jnp.zeros_like, self.params
+            v = jax.tree.map(
+                lambda v_, d: b2 * v_ + (1 - b2) * jnp.square(d), state.opt_v, avg_delta
             )
-            self.params, mom = _server_step(
-                self.params, weighted, wsum, mom,
-                jnp.asarray(self.server_lr, jnp.float32),
-                jnp.asarray(self.algo.server_momentum, jnp.float32),
-                self.algo.server_momentum > 0,
-            )
-            if self.momentum_buf is not None:
-                self.momentum_buf = mom
+        params = jax.tree.map(
+            lambda p, m_, v_: p + slr * m_ / (jnp.sqrt(jnp.maximum(v_, 0.0)) + eps),
+            state.params, m, v,
+        )
+        return state._replace(params=params, opt_m=m, opt_v=v, opt_t=t)
+    if algo.server_momentum > 0:
+        momentum = jax.tree.map(
+            lambda m_, d: algo.server_momentum * m_ + d, state.momentum, avg_delta
+        )
+        params = jax.tree.map(lambda p, s: p + slr * s, state.params, momentum)
+        return state._replace(params=params, momentum=momentum)
+    params = jax.tree.map(lambda p, d: p + slr * d, state.params, avg_delta)
+    return state._replace(params=params)
 
-        if self.algo.uses_cvar and n_total_clients and cvar_deltas:
-            # Scaffold: c ← c + (1/N)·Σ_k (c_k' − c_k)
-            cd = jax.tree.map(lambda *cs: sum(cs), *cvar_deltas)
-            self.c_server = jax.tree.map(
-                lambda c, d: c + d / n_total_clients, self.c_server, cd
-            )
-        return self.params
+
+def scaffold_update(
+    state: ServerState,
+    cvar_delta_sum: Any,  # Σ_k (c_k' − c_k), zeros on padded cohort slots
+    new_cvars: Any,  # (cohort, ...) updated client variates
+    client_ids: jax.Array,  # (cohort,) int32, −1 = padded slot
+    *,
+    n_total_clients: int,
+) -> ServerState:
+    """Scaffold server-side bookkeeping, pure and scatter-based.
+
+    ``c ← c + (1/N)·Σ_k (c_k' − c_k)`` and the per-client variates are
+    scattered back into the stacked ``(n_clients, ...)`` table in one
+    ``.at[ids].set`` (padded slots target row ``n_total_clients`` and are
+    dropped).
+    """
+    c_server = jax.tree.map(
+        lambda c, d: c + d / n_total_clients, state.c_server, cvar_delta_sum
+    )
+    safe = jnp.where(client_ids >= 0, client_ids, n_total_clients)
+    cvars = jax.tree.map(
+        lambda table, new: table.at[safe].set(new, mode="drop"),
+        state.cvars, new_cvars,
+    )
+    return state._replace(c_server=c_server, cvars=cvars)

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import latest_checkpoint
 from repro.configs.base import Fed3RConfig, FederatedConfig
 from repro.core import calibration, fed3r, ncm
 from repro.core.random_features import RFFParams, rff_init, rff_map
@@ -42,9 +43,14 @@ def _default_extractor(x: np.ndarray) -> jax.Array:
 
 def _fresh_clients(sampled, seen: set) -> List[int]:
     """Statistics of a client are sent exactly once: a resampled or
-    re-drawn client re-sends nothing (idempotent), in both sampling modes."""
-    fresh = [k for k in (int(k) for k in sampled) if k not in seen]
-    seen.update(fresh)
+    re-drawn client re-sends nothing (idempotent), in both sampling modes.
+    With-replacement rounds can contain the same client TWICE, so the dedup
+    runs draw by draw, not against the previous rounds only."""
+    fresh = []
+    for k in (int(k) for k in sampled):
+        if k not in seen:
+            seen.add(k)
+            fresh.append(k)
     return fresh
 
 
@@ -251,20 +257,28 @@ def run_fed3r_ft(
     strategy: Optional[str] = None,
     use_fed3r_init: bool = True,
     eval_every: int = 10,
+    ckpt_dir: Optional[str] = None,
+    resume: bool = False,
 ) -> Tuple[Any, Dict[str, Any]]:
     """Two-stage FED3R+FT (paper §4.4 / Table 2).
 
     Stage 1: FED3R classifier (skipped if ``use_fed3r_init=False`` — the
     paper's "✗ init" ablation rows).  Temperature-calibrate the init.
     Stage 2: federated fine-tuning with the configured algorithm and the
-    requested freeze strategy.
+    requested freeze strategy, one jitted dispatch per round through the
+    cohort round engine; ``ckpt_dir``/``resume`` snapshot and restore the
+    FT phase's full ServerState at round granularity.
     """
     strategy = strategy or f3_cfg.ft_strategy
     C = dataset.n_classes
     d = dataset.features.shape[-1]
 
+    # Resuming from a full FT-state snapshot makes stage 1 dead work: the
+    # loaded ServerState overwrites whatever init it would produce.
+    resuming = bool(ckpt_dir and resume and latest_checkpoint(ckpt_dir))
+
     info: Dict[str, Any] = {}
-    if use_fed3r_init:
+    if use_fed3r_init and not resuming:
         W, stats, hist1 = run_fed3r(
             dataset, test_features, test_labels, f3_cfg, fed_cfg,
             eval_every=max(1, dataset.n_clients // fed_cfg.clients_per_round),
@@ -284,6 +298,9 @@ def run_fed3r_ft(
     task = feature_finetune_task(
         d, C, W_init, test_features, test_labels, strategy=strategy
     )
-    params, hist2 = run_federated(task, dataset, fed_cfg, eval_every=eval_every)
+    params, hist2 = run_federated(
+        task, dataset, fed_cfg, eval_every=eval_every,
+        ckpt_dir=ckpt_dir, resume=resume,
+    )
     info["ft_history"] = hist2
     return params, info

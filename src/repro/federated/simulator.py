@@ -1,26 +1,37 @@
-"""Federated round-loop simulator.
+"""Federated round-loop simulator on the batched cohort round engine.
 
 Runs any :mod:`repro.federated.algorithms` algorithm over a
-:class:`repro.data.pipeline.FederatedDataset`.  Client data is padded to a
-global (n_batches, batch_size) shape so one jitted ``local_update`` serves
-every client without retracing.  Designed for CPU-scale experiments
-(linear heads or reduced backbones); the datacenter path lives in
-launch/train.py.
+:class:`repro.data.pipeline.FederatedDataset`.  Each round, the sampled
+cohort is packed into stacked ``(cohort, n_steps, batch)`` arrays
+(:func:`repro.data.pipeline.pack_cohort_batches`) and the WHOLE round —
+vmapped local updates, on-device weighted aggregation, server optimizer
+step, Scaffold cvar scatter — executes as ONE jitted dispatch through
+:class:`repro.federated.round_engine.RoundEngine` (K+1 dispatches/round
+in the seed-era per-client loop).
+
+Rounds are resumable: cohorts and epoch shuffles are pure functions of
+(seed, round, client id), and the full :class:`ServerState` checkpoints
+through :mod:`repro.checkpoint`, so a run stopped at any round boundary
+and restarted with ``resume=True`` reproduces the uninterrupted run
+exactly.  Designed for CPU-scale experiments (linear heads or reduced
+backbones); the datacenter path lives in launch/train.py.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.checkpoint import latest_checkpoint, load_pytree, save_pytree
 from repro.configs.base import FederatedConfig
-from repro.data.pipeline import FederatedDataset, pack_client_batches
-from repro.federated.algorithms import Server, make_algorithm, make_local_update
-from repro.federated.sampling import ClientSampler
+from repro.data.pipeline import FederatedDataset, pack_cohort_batches
+from repro.federated.algorithms import make_algorithm, server_state_from_tree
+from repro.federated.round_engine import RoundConfig, RoundEngine
+from repro.federated.sampling import sample_round
 
 
 class FLTask(NamedTuple):
@@ -53,6 +64,51 @@ class FLHistory:
         }
 
 
+def make_round_engine(
+    task: FLTask, dataset: FederatedDataset, cfg: FederatedConfig
+) -> RoundEngine:
+    """The simulator's engine: merge aggregation on the ambient mesh."""
+    algo = make_algorithm(
+        cfg.algorithm, prox_mu=cfg.prox_mu, server_momentum=cfg.server_momentum
+    )
+    return RoundEngine(
+        RoundConfig(
+            algo=algo,
+            client_lr=cfg.client_lr,
+            server_lr=cfg.server_lr,
+            weight_decay=cfg.client_weight_decay,
+            n_total_clients=dataset.n_clients,
+        ),
+        task.per_example_loss,
+        task.freeze,
+    )
+
+
+def pack_round(
+    dataset: FederatedDataset,
+    cfg: FederatedConfig,
+    rnd: int,
+    n_batches: int,
+):
+    """The packed cohort of round ``rnd`` — a pure function of (cfg, rnd).
+
+    Sampling and the per-client epoch shuffles both derive from
+    (cfg.seed, rnd, client id), which is what makes stop/resume exact.
+    """
+    chosen = sample_round(
+        dataset.n_clients, cfg.clients_per_round, rnd,
+        seed=cfg.seed, replacement=cfg.sample_with_replacement,
+    )
+    clients = [
+        (dataset.client(int(k)).features, dataset.client(int(k)).labels)
+        for k in chosen
+    ]
+    return chosen, pack_cohort_batches(
+        clients, cfg.local_batch_size, n_batches, cfg.local_epochs,
+        client_ids=chosen, seed=(cfg.seed + 7, rnd),
+    )
+
+
 def run_federated(
     task: FLTask,
     dataset: FederatedDataset,
@@ -60,61 +116,60 @@ def run_federated(
     *,
     eval_every: int = 10,
     verbose: bool = False,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: Optional[int] = None,
+    resume: bool = False,
 ) -> tuple:
-    """Run cfg.n_rounds of federated training. Returns (params, FLHistory)."""
-    algo = make_algorithm(
-        cfg.algorithm, prox_mu=cfg.prox_mu, server_momentum=cfg.server_momentum
-    )
-    local_update = make_local_update(
-        task.per_example_loss, algo, lr=cfg.client_lr,
-        weight_decay=cfg.client_weight_decay,
-    )
-    server = Server(algo, task.params0, server_lr=cfg.server_lr)
-    sampler = ClientSampler(
-        dataset.n_clients, cfg.clients_per_round,
-        replacement=cfg.sample_with_replacement, seed=cfg.seed,
-    )
+    """Run cfg.n_rounds of federated training. Returns (params, FLHistory).
+
+    With ``ckpt_dir`` the full :class:`ServerState` (params, momentum,
+    adaptive m/v/t, stacked cvars, round index) is snapshotted every
+    ``ckpt_every`` rounds (default: ``eval_every``); ``resume=True`` picks
+    up from the latest snapshot and reproduces the uninterrupted run.
+    """
+    engine = make_round_engine(task, dataset, cfg)
+    state, start_round = None, 0
+    if resume and ckpt_dir:
+        path = latest_checkpoint(ckpt_dir)
+        if path is not None:
+            state = server_state_from_tree(load_pytree(path))
+            start_round = int(state.round)
+    if state is None:
+        state = engine.init(task.params0)
 
     max_nk = int(dataset.client_sizes().max())
     n_batches = -(-max_nk // cfg.local_batch_size)
-    np_rng = np.random.default_rng(cfg.seed + 7)
 
-    zeros_like_params = jax.tree.map(jnp.zeros_like, task.params0)
-    cvars: Dict[int, Any] = {}
+    seen: set = set()
+    for rnd in range(start_round):  # replay coverage of resumed rounds
+        seen.update(
+            int(k) for k in sample_round(
+                dataset.n_clients, cfg.clients_per_round, rnd,
+                seed=cfg.seed, replacement=cfg.sample_with_replacement,
+            )
+        )
 
     hist = FLHistory()
     t0 = time.time()
-    for rnd in range(cfg.n_rounds):
-        chosen = sampler.sample()
-        results, cvar_deltas = [], []
-        for k in chosen:
-            cd = dataset.client(int(k))
-            batches = pack_client_batches(
-                cd.features, cd.labels, cfg.local_batch_size, n_batches,
-                cfg.local_epochs, np_rng,
-            )
-            batches = {kk: jnp.asarray(v) for kk, v in batches.items()}
-            c_client = cvars.get(int(k), zeros_like_params) if algo.uses_cvar else zeros_like_params
-            c_server = server.c_server if algo.uses_cvar else zeros_like_params
-            res = local_update(server.params, batches, task.freeze, c_server, c_client)
-            results.append(res)
-            if algo.uses_cvar:
-                cvar_deltas.append(
-                    jax.tree.map(lambda n, o: n - o, res.new_cvar, c_client)
-                )
-                cvars[int(k)] = res.new_cvar
-        server.aggregate(results, n_total_clients=dataset.n_clients,
-                         cvar_deltas=cvar_deltas or None)
+    for rnd in range(start_round, cfg.n_rounds):
+        chosen, cohort = pack_round(dataset, cfg, rnd, n_batches)
+        seen.update(int(k) for k in chosen)
+        state = engine.step(state, cohort)
+
+        if ckpt_dir and (
+            (rnd + 1) % (ckpt_every or eval_every) == 0 or rnd == cfg.n_rounds - 1
+        ):
+            save_pytree(os.path.join(ckpt_dir, f"ckpt_{rnd + 1}.npz"), state)
 
         if task.eval_fn is not None and ((rnd + 1) % eval_every == 0 or rnd == cfg.n_rounds - 1):
-            acc = float(task.eval_fn(server.params))
+            acc = float(task.eval_fn(state.params))
             hist.rounds.append(rnd + 1)
             hist.accuracy.append(acc)
-            hist.coverage.append(sampler.coverage)
+            hist.coverage.append(len(seen) / dataset.n_clients)
             hist.wall_time.append(time.time() - t0)
             if verbose:
-                print(f"round {rnd+1:5d}  acc={acc:.4f}  coverage={sampler.coverage:.2f}")
-    return server.params, hist
+                print(f"round {rnd+1:5d}  acc={acc:.4f}  coverage={len(seen)/dataset.n_clients:.2f}")
+    return state.params, hist
 
 
 # ---------------------------------------------------------------------------

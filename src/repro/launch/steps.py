@@ -1,8 +1,14 @@
 """Step functions lowered onto the production mesh.
 
-* ``train_step`` — one FL local SGD step (fwd + bwd + parameter update);
-  the FT-phase workhorse.  Frozen-subtree masks (FT-LP / FT-FEAT) multiply
-  gradients by a 0/1 pytree.
+* ``train_step`` — one centralized SGD step (fwd + bwd + parameter
+  update) with microbatching and mixed precision; the LM-pretraining
+  shape.  Frozen-subtree masks multiply gradients by a 0/1 pytree.
+* ``cls_per_example_loss`` — the classification objective of the FED3R+FT
+  phase (backbone features → softmax head) in the per-example form the
+  batched cohort round engine (:mod:`repro.federated.round_engine`)
+  consumes: launch/train.py runs WHOLE FT rounds as one dispatch with the
+  cohort dim sharded over the data axes, replacing the former ad-hoc
+  per-client ``local_step`` loop here.
 * ``prefill_step`` — forward + KV/state cache construction.
 * ``decode_step`` — one token against the cache.
 * ``fed3r_stats_step`` — the paper's statistics pass: backbone features →
@@ -90,6 +96,27 @@ def make_train_step(
         return params, loss
 
     return train_step
+
+
+def make_cls_per_example_loss(cfg: ModelConfig) -> Callable:
+    """Per-example softmax-classification loss over backbone features.
+
+    Params are ``{"backbone": ..., "head": {"W", "b"}}``; the batch is the
+    round engine's ``{"x": tokens, "y": class labels, "mask": ...}`` dict.
+    Returns ``(batch_size,)`` losses — masking/averaging happens inside the
+    engine's ``local_update``, so padding rows contribute exactly nothing.
+    """
+
+    def per_example_loss(params, batch):
+        feats = model_lib.extract_features(cfg, params["backbone"], {"tokens": batch["x"]})
+        logits = feats @ params["head"]["W"] + params["head"]["b"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, batch["y"][:, None].astype(jnp.int32), axis=-1
+        )[:, 0]
+        return lse - picked
+
+    return per_example_loss
 
 
 def make_prefill_step(cfg: ModelConfig, cache_capacity: int) -> Callable:

@@ -1,0 +1,336 @@
+"""Batched cohort round engine: parity, invariance, hot-path purity, resume.
+
+The engine's contract (federated/round_engine.py):
+  * packed one-dispatch ``round_step`` == the per-client reference loop for
+    fedavg / fedprox / scaffold (same local-update math, same pure server
+    transition), within fp tolerance;
+  * freeze-mask semantics of the FT strategies: frozen subtrees are
+    BIT-identical after rounds, trainable subtrees move;
+  * the aggregated round is bitwise invariant to cohort sampling order
+    (canonical cohort packing + per-(seed, client) shuffling);
+  * the round hot path performs NO host transfers (regression for the
+    ``float(r.n_samples)`` / Python-sum aggregation of the old Server);
+  * stateless sampling in both modes (the replacement branch used to call
+    ``rng.choice(..., replace=False)`` and crash when per_round > K);
+  * the full ServerState round-trips through repro.checkpoint and a
+    stopped+resumed run reproduces the uninterrupted run exactly.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs.base import FederatedConfig
+from repro.data import make_federated_features
+from repro.data.pipeline import PackedCohort, pack_cohort_batches
+from repro.federated.algorithms import (
+    make_algorithm,
+    server_init,
+    server_state_from_tree,
+)
+from repro.federated.fed3r_driver import feature_finetune_task
+from repro.federated.round_engine import ReferenceLoop, RoundConfig, RoundEngine
+from repro.federated.sampling import ClientSampler, sample_round
+from repro.federated.simulator import linear_head_task, pack_round, run_federated
+
+N_CLIENTS, C, D = 12, 4, 8
+
+
+@pytest.fixture(scope="module")
+def fed_data():
+    return make_federated_features(
+        seed=0, n=600, d=D, n_classes=C, n_clients=N_CLIENTS, alpha=0.0, noise=1.5
+    )
+
+
+def _fc(**kw):
+    base = dict(
+        n_clients=N_CLIENTS, clients_per_round=4, n_rounds=3, local_epochs=1,
+        local_batch_size=16, client_lr=0.1, algorithm="fedavg", seed=0,
+    )
+    base.update(kw)
+    return FederatedConfig(**base)
+
+
+def _rc(algo_name, **kw):
+    algo = make_algorithm(algo_name, server_momentum=0.9 if algo_name == "fedavgm" else 0.0)
+    base = dict(algo=algo, client_lr=0.1, n_total_clients=N_CLIENTS)
+    base.update(kw)
+    return RoundConfig(**base)
+
+
+def _run_both(task, fed, rc, n_rounds=3, fc=None):
+    fc = fc or _fc()
+    eng = RoundEngine(rc, task.per_example_loss, task.freeze)
+    ref = ReferenceLoop(rc, task.per_example_loss, task.freeze)
+    se, sr = eng.init(task.params0), ref.init(task.params0)
+    for rnd in range(n_rounds):
+        _, cohort = pack_round(fed, fc, rnd, n_batches=4)
+        se = eng.step(se, cohort)
+        sr = ref.step(sr, cohort)
+    return eng, ref, se, sr
+
+
+# ---------------------------------------------------------------------------
+# engine vs per-client reference loop — parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", ["fedavg", "fedprox", "scaffold"])
+def test_round_engine_matches_reference_loop(fed_data, algo):
+    fed, test = fed_data
+    task = linear_head_task(D, C, test.features, test.labels)
+    eng, ref, se, sr = _run_both(task, fed, _rc(algo))
+    for k in ("W", "bias"):
+        np.testing.assert_allclose(
+            np.asarray(se.params[k]), np.asarray(sr.params[k]),
+            rtol=1e-5, atol=1e-6,
+        )
+    assert int(se.round) == int(sr.round) == 3
+    # dispatch economics: 1 per round vs K+1 per round
+    assert eng.dispatches == 3
+    assert ref.dispatches == 3 * (4 + 1)
+
+
+def test_round_engine_scaffold_cvar_state_matches_reference(fed_data):
+    fed, test = fed_data
+    task = linear_head_task(D, C, test.features, test.labels)
+    _, _, se, sr = _run_both(task, fed, _rc("scaffold"))
+    for a, b in zip(jax.tree.leaves(se.cvars), jax.tree.leaves(sr.cvars)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(se.c_server), jax.tree.leaves(sr.c_server)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+    # only the sampled rows of the stacked table moved
+    sampled = set()
+    for rnd in range(3):
+        sampled.update(int(k) for k in sample_round(N_CLIENTS, 4, rnd, seed=0))
+    w_cvar = np.asarray(se.cvars["W"])
+    for k in range(N_CLIENTS):
+        if k not in sampled:
+            assert not w_cvar[k].any()
+
+
+@pytest.mark.parametrize("algo", ["fedavgm", "fedadam", "fedyogi"])
+def test_round_engine_server_optimizers_match_reference(fed_data, algo):
+    fed, test = fed_data
+    task = linear_head_task(D, C, test.features, test.labels)
+    rc = _rc(algo, server_lr=0.01 if algo in ("fedadam", "fedyogi") else 1.0)
+    _, _, se, sr = _run_both(task, fed, rc)
+    np.testing.assert_allclose(np.asarray(se.params["W"]), np.asarray(sr.params["W"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# freeze-mask semantics (FED3R+FT strategies)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy,frozen,trainable", [
+    ("full", (), ("M", "W", "bias")),
+    ("lp", ("M",), ("W", "bias")),
+    ("feat", ("W", "bias"), ("M",)),
+])
+def test_freeze_strategies(fed_data, strategy, frozen, trainable):
+    fed, test = fed_data
+    W0 = 0.01 * jax.random.normal(jax.random.PRNGKey(1), (D, C))
+    task = feature_finetune_task(D, C, W0, test.features, test.labels,
+                                 strategy=strategy)
+    eng = RoundEngine(_rc("fedavg"), task.per_example_loss, task.freeze)
+    state = eng.init(task.params0)
+    for rnd in range(2):
+        _, cohort = pack_round(fed, _fc(), rnd, n_batches=4)
+        state = eng.step(state, cohort)
+    for k in frozen:
+        np.testing.assert_array_equal(
+            np.asarray(state.params[k]), np.asarray(task.params0[k])
+        )
+    for k in trainable:
+        assert not np.array_equal(
+            np.asarray(state.params[k]), np.asarray(task.params0[k])
+        )
+
+
+# ---------------------------------------------------------------------------
+# cohort permutation invariance (bitwise)
+# ---------------------------------------------------------------------------
+
+
+def test_round_invariant_under_cohort_permutation(fed_data):
+    fed, test = fed_data
+    task = linear_head_task(D, C, test.features, test.labels)
+    ids = [7, 2, 11, 5]
+    clients = [(fed.client(k).features, fed.client(k).labels) for k in ids]
+    p1 = pack_cohort_batches(clients, 16, 4, client_ids=ids, seed=(0, 0))
+    perm = [2, 0, 3, 1]
+    p2 = pack_cohort_batches(
+        [clients[i] for i in perm], 16, 4,
+        client_ids=[ids[i] for i in perm], seed=(0, 0),
+    )
+    for a, b in zip(p1, p2):  # identical packed arrays...
+        np.testing.assert_array_equal(a, b)
+    eng = RoundEngine(_rc("fedavg"), task.per_example_loss, task.freeze)
+    s1 = eng.step(eng.init(task.params0), p1)
+    s2 = eng.step(eng.init(task.params0), p2)
+    # ...hence a bit-identical aggregated round
+    np.testing.assert_array_equal(np.asarray(s1.params["W"]), np.asarray(s2.params["W"]))
+    np.testing.assert_array_equal(np.asarray(s1.params["bias"]), np.asarray(s2.params["bias"]))
+
+
+def test_padded_cohort_slots_are_noops(fed_data):
+    fed, test = fed_data
+    task = linear_head_task(D, C, test.features, test.labels)
+    ids = [3, 8]
+    clients = [(fed.client(k).features, fed.client(k).labels) for k in ids]
+    tight = pack_cohort_batches(clients, 16, 4, client_ids=ids, seed=(0, 0))
+    padded = pack_cohort_batches(clients, 16, 4, client_ids=ids, seed=(0, 0),
+                                 cohort_size=5)
+    assert padded.cohort == 5 and padded.n_clients == 2
+    for algo in ("fedavg", "scaffold"):
+        eng = RoundEngine(_rc(algo), task.per_example_loss, task.freeze)
+        s1 = eng.step(eng.init(task.params0), tight)
+        s2 = eng.step(eng.init(task.params0), padded)
+        np.testing.assert_allclose(np.asarray(s1.params["W"]),
+                                   np.asarray(s2.params["W"]), rtol=1e-6, atol=1e-7)
+        if algo == "scaffold":
+            np.testing.assert_allclose(
+                np.asarray(s1.c_server["W"]), np.asarray(s2.c_server["W"]),
+                rtol=1e-6, atol=1e-7,
+            )
+
+
+# ---------------------------------------------------------------------------
+# hot path is transfer-free (regression: float()/Python-sum aggregation)
+# ---------------------------------------------------------------------------
+
+
+def test_round_step_hot_path_makes_no_host_transfers(fed_data):
+    fed, test = fed_data
+    task = linear_head_task(D, C, test.features, test.labels)
+    eng = RoundEngine(_rc("scaffold"), task.per_example_loss, task.freeze)
+    _, cohort = pack_round(fed, _fc(), 0, n_batches=4)
+    dev_cohort = PackedCohort(*[jnp.asarray(a) for a in cohort])
+    state = eng.step(eng.init(task.params0), dev_cohort)  # warm the trace
+    # steady-state rounds: everything already on device ⇒ zero transfers
+    with jax.transfer_guard("disallow"):
+        state = eng.step(state, dev_cohort)
+        state = eng.step(state, dev_cohort)
+    assert int(state.round) == 3
+
+
+# ---------------------------------------------------------------------------
+# sampling: both modes, statelessness
+# ---------------------------------------------------------------------------
+
+
+def test_sampler_with_replacement_honors_the_flag():
+    # regression: this mode used to call rng.choice(..., replace=False)
+    draws = [sample_round(5, 64, r, seed=0, replacement=True) for r in range(4)]
+    for d in draws:
+        assert len(d) == 64  # per_round > n_clients is legal with replacement
+    # iid draws: some round contains a duplicate with overwhelming probability
+    assert any(len(np.unique(d)) < len(d) for d in draws)
+
+
+def test_sampler_without_replacement_epoch_exactness():
+    per_epoch = []
+    for rnd in range(6):  # 6 rounds × 4 = 2 epochs over 12 clients
+        per_epoch.extend(sample_round(12, 4, rnd, seed=3).tolist())
+    assert sorted(per_epoch[:12]) == list(range(12))  # epoch 1 exact
+    assert sorted(per_epoch[12:]) == list(range(12))  # epoch 2 exact
+    assert per_epoch[:12] != list(range(12))  # and actually shuffled
+
+
+def test_sample_round_is_stateless_and_sampler_delegates():
+    for replacement in (False, True):
+        a = [sample_round(10, 3, r, seed=1, replacement=replacement) for r in range(5)]
+        b = [sample_round(10, 3, r, seed=1, replacement=replacement) for r in range(5)]
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+        s = ClientSampler(10, 3, replacement=replacement, seed=1)
+        for x in a:
+            np.testing.assert_array_equal(x, s.sample())
+    assert ClientSampler(17, 5).rounds_to_full_coverage() == 4
+
+
+# ---------------------------------------------------------------------------
+# ServerState checkpointing + stop/resume equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_server_state_checkpoint_roundtrip(tmp_path):
+    params = {"W": jnp.ones((3, 2)), "bias": jnp.zeros((2,))}
+    state = server_init(make_algorithm("scaffold"), params, n_clients=5)
+    state = state._replace(round=jnp.asarray(4, jnp.int32))
+    path = os.path.join(tmp_path, "ckpt_4.npz")
+    save_pytree(path, state)
+    back = server_state_from_tree(load_pytree(path))
+    assert int(back.round) == 4
+    assert back.momentum is None and back.opt_m is None  # Nones survive
+    assert back.cvars["W"].shape == (5, 3, 2)
+    np.testing.assert_array_equal(np.asarray(state.params["W"]), back.params["W"])
+
+
+@pytest.mark.parametrize("algo", ["fedavg", "scaffold", "fedadam"])
+def test_stop_resume_reproduces_uninterrupted_run(fed_data, tmp_path, algo):
+    fed, test = fed_data
+    kw = dict(algorithm=algo, n_rounds=6,
+              server_lr=0.01 if algo == "fedadam" else 1.0)
+    task = linear_head_task(D, C, test.features, test.labels)
+    straight, _ = run_federated(task, fed, _fc(**kw), eval_every=3)
+
+    ckpt = str(tmp_path / algo)
+    task2 = linear_head_task(D, C, test.features, test.labels)
+    run_federated(task2, fed, _fc(**{**kw, "n_rounds": 3}), eval_every=3,
+                  ckpt_dir=ckpt)
+    task3 = linear_head_task(D, C, test.features, test.labels)
+    resumed, _ = run_federated(task3, fed, _fc(**kw), eval_every=3,
+                               ckpt_dir=ckpt, resume=True)
+    np.testing.assert_array_equal(np.asarray(straight["W"]), np.asarray(resumed["W"]))
+    np.testing.assert_array_equal(np.asarray(straight["bias"]), np.asarray(resumed["bias"]))
+
+
+# ---------------------------------------------------------------------------
+# mesh mode: psum backend == merge backend
+# ---------------------------------------------------------------------------
+
+
+def test_round_engine_psum_matches_merge_on_host_mesh(fed_data):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    fed, test = fed_data
+    task = linear_head_task(D, C, test.features, test.labels)
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    _, cohort = pack_round(fed, _fc(), 0, n_batches=4)  # cohort of 4
+
+    merge_eng = RoundEngine(_rc("fedavg"), task.per_example_loss, task.freeze)
+    ref = merge_eng.step(merge_eng.init(task.params0), cohort)
+
+    psum_eng = RoundEngine(
+        _rc("fedavg", aggregation="psum", mesh_axes=("data",), donate=False),
+        task.per_example_loss, task.freeze,
+    )
+    step = shard_map(
+        psum_eng.round_step, mesh=mesh,
+        in_specs=(P(), P("data"), P("data")), out_specs=P(),
+    )
+    batches = {k: jnp.asarray(v) for k, v in cohort.batches().items()}
+    got = step(psum_eng.init(task.params0), batches, jnp.asarray(cohort.client_ids))
+    np.testing.assert_allclose(np.asarray(ref.params["W"]), np.asarray(got.params["W"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_psum_config_validation(fed_data):
+    fed, test = fed_data
+    task = linear_head_task(D, C, test.features, test.labels)
+    with pytest.raises(ValueError):
+        RoundEngine(_rc("fedavg", aggregation="psum"), task.per_example_loss, task.freeze)
+    with pytest.raises(ValueError):
+        RoundEngine(_rc("scaffold", aggregation="psum", mesh_axes=("data",)),
+                    task.per_example_loss, task.freeze)
+    with pytest.raises(ValueError):
+        RoundEngine(_rc("fedavg", aggregation="allgather"), task.per_example_loss, task.freeze)
