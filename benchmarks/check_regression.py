@@ -1,0 +1,151 @@
+"""CI benchmark-regression gate over the BENCH_*.json perf records.
+
+``benchmarks/run.py --smoke`` persists each engine benchmark's result dict
+as ``BENCH_<name>.json``; this script compares those against the committed
+baselines in ``benchmarks/baselines/`` and FAILS (exit 1) on regression.
+The rules are keyed by metric name, so new benchmarks join the gate by
+emitting a dict — no per-benchmark code here:
+
+* ``*dispatch*``  — the dispatch-count contracts (1 per round/stream, K+1
+  and T for the reference loops).  Integers, compared exactly downward:
+  MORE dispatches than baseline is the regression the engines exist to
+  prevent; fewer is an improvement.
+* ``*speedup*``   — engine-vs-reference wall-time ratio.  Machine-
+  normalized, so it gates meaningfully on shared CI runners; must stay
+  above ``speedup_tol`` × baseline.
+* ``*err*``       — parity / divergence numerics; must stay below
+  ``err_tol`` × baseline (with an absolute ``err_floor`` so near-zero
+  baselines don't fail on fp jitter).
+* ``*_s`` / ``*_s_per_*`` — absolute wall-times; gated loosely
+  (``time_tol`` ×) since absolute CI timing is noisy — order-of-magnitude
+  blowups still fail.
+* booleans        — exact (the bit-identical invariance flags).
+* other integers  — exact (config echoes: waves, samples, cohort; a
+  drifted smoke config silently invalidates every other comparison, so
+  it must come with a re-seeded baseline).
+
+Usage:
+  python benchmarks/check_regression.py            # after run.py --smoke
+  python benchmarks/check_regression.py --baseline-dir benchmarks/baselines
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+def flatten(d: dict, prefix: str = "") -> Dict[str, object]:
+    out: Dict[str, object] = {}
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(flatten(v, prefix=f"{key}."))
+        else:
+            out[key] = v
+    return out
+
+
+def compare(
+    current: dict,
+    baseline: dict,
+    *,
+    time_tol: float = 10.0,
+    speedup_tol: float = 0.25,
+    err_tol: float = 100.0,
+    err_floor: float = 1e-4,
+    label: str = "",
+) -> List[str]:
+    """Rule-by-name comparison; returns human-readable violations."""
+    cur = flatten(current)
+    base = flatten(baseline)
+    bad: List[str] = []
+
+    def fail(key: str, msg: str) -> None:
+        bad.append(f"{label}{key}: {msg}")
+
+    for key, b in base.items():
+        if key not in cur:
+            fail(key, "missing from current results")
+            continue
+        c = cur[key]
+        if isinstance(b, bool):
+            if c != b:
+                fail(key, f"flag flipped: {c!r} (baseline {b!r})")
+        elif "dispatch" in key:
+            if int(c) > int(b):
+                fail(key, f"{int(c)} dispatches > baseline {int(b)}")
+        elif "speedup" in key:
+            if float(c) < float(b) * speedup_tol:
+                fail(
+                    key,
+                    f"{float(c):.2f}x < {speedup_tol} * baseline {float(b):.2f}x",
+                )
+        elif "err" in key:
+            limit = max(float(b) * err_tol, err_floor)
+            if float(c) > limit:
+                fail(key, f"{float(c):.3e} > limit {limit:.3e}")
+        elif key.endswith("_s") or "_s_per" in key:
+            if float(c) > float(b) * time_tol:
+                fail(
+                    key,
+                    f"{float(c):.4f}s > {time_tol} * baseline {float(b):.4f}s",
+                )
+        elif isinstance(b, int) and isinstance(c, (int, float)):
+            if int(c) != int(b):
+                fail(key, f"config echo changed: {c!r} != baseline {b!r} (re-seed)")
+        # other floats are informational only
+    return bad
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines")
+    ap.add_argument("--current-dir", default=".")
+    ap.add_argument("--time-tol", type=float, default=10.0)
+    ap.add_argument("--speedup-tol", type=float, default=0.25)
+    ap.add_argument("--err-tol", type=float, default=100.0)
+    ap.add_argument("--err-floor", type=float, default=1e-4)
+    args = ap.parse_args()
+
+    paths = sorted(glob.glob(os.path.join(args.baseline_dir, "BENCH_*.json")))
+    if not paths:
+        print(f"no baselines under {args.baseline_dir}", file=sys.stderr)
+        return 1
+    violations: List[str] = []
+    for path in paths:
+        name = os.path.basename(path)
+        cur_path = os.path.join(args.current_dir, name)
+        if not os.path.exists(cur_path):
+            violations.append(f"{name}: not produced by this run")
+            continue
+        with open(path) as f:
+            baseline = json.load(f)
+        with open(cur_path) as f:
+            current = json.load(f)
+        violations.extend(
+            compare(
+                current,
+                baseline,
+                time_tol=args.time_tol,
+                speedup_tol=args.speedup_tol,
+                err_tol=args.err_tol,
+                err_floor=args.err_floor,
+                label=f"{name}:",
+            )
+        )
+        print(f"checked {name} against {path}")
+    if violations:
+        print("\nBENCHMARK REGRESSIONS:", file=sys.stderr)
+        for v in violations:
+            print(f"  {v}", file=sys.stderr)
+        return 1
+    print("benchmark gate: all baselines honored")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -11,9 +11,6 @@ from __future__ import annotations
 import time
 from contextlib import contextmanager
 
-import jax
-import numpy as np
-
 from repro.configs.base import Fed3RConfig, FederatedConfig
 from repro.data import make_federated_features
 

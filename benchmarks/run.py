@@ -14,15 +14,21 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to paper artifacts:
   bench_kernels          (kernels)         Pallas-vs-oracle + XLA timing
   bench_engine           (engine)          packed scan vs per-client loop
   bench_rounds           (round engine)    packed FL round vs per-client loop
+  bench_streaming        (streaming)       packed arrival scan vs Woodbury loop
   roofline               §Roofline         dry-run roofline table
 
 Modules listed in ``JSON_OUT`` additionally persist their result dict as a
-``BENCH_<name>.json`` next to the invocation — the perf trajectory record.
+``BENCH_<name>.json`` next to the invocation — the perf trajectory record
+that ``benchmarks/check_regression.py`` gates CI against (baselines live
+in ``benchmarks/baselines/``).
+
+Usage: PYTHONPATH=src:. python benchmarks/run.py [--smoke] [names ...]
 """
 from __future__ import annotations
 
+import argparse
+import inspect
 import json
-import sys
 import time
 import traceback
 
@@ -32,6 +38,7 @@ MODULES = [
     "bench_kernels",
     "bench_engine",
     "bench_rounds",
+    "bench_streaming",
     "bench_invariance",
     "bench_ncm",
     "bench_rf",
@@ -43,11 +50,20 @@ MODULES = [
 ]
 
 # result dicts persisted as BENCH_<suffix>.json (perf trajectory record)
-JSON_OUT = {"bench_rounds": "rounds"}
+JSON_OUT = {
+    "bench_engine": "engine",
+    "bench_rounds": "rounds",
+    "bench_streaming": "streaming",
+}
 
 
 def main() -> None:
-    only = sys.argv[1:] or None
+    ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="*", help="subset of benchmark modules")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small configs (CI budget) where supported")
+    args = ap.parse_args()
+    only = args.names or None
     print("name,us_per_call,derived")
     failures = []
     for name in MODULES:
@@ -56,7 +72,10 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            result = mod.main()
+            kwargs = {}
+            if args.smoke and "smoke" in inspect.signature(mod.main).parameters:
+                kwargs["smoke"] = True
+            result = mod.main(**kwargs)
             if name in JSON_OUT and isinstance(result, dict):
                 with open(f"BENCH_{JSON_OUT[name]}.json", "w") as f:
                     json.dump(result, f, indent=2, default=float)

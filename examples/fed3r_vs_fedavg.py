@@ -6,7 +6,6 @@ same one-class-per-client federation.
 
     PYTHONPATH=src python examples/fed3r_vs_fedavg.py
 """
-import numpy as np
 
 from repro.configs.base import Fed3RConfig, FederatedConfig
 from repro.data import make_federated_features

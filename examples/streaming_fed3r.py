@@ -1,13 +1,17 @@
-"""Streaming FED3R — the paper's stated future work (§6), implemented.
+"""Streaming FED3R — the paper's stated future work (§6), on the engine.
 
 Clients arrive over time with NEW data (not a fixed federation snapshot).
 Because the statistics are an exact running sum, the server can refresh the
-closed-form classifier after every arrival batch with zero re-training —
-the recursive-least-squares formulation of §4.1.  Two server modes:
+closed-form classifier as arrivals land with zero re-training — the
+recursive-least-squares formulation of §4.1.  This example runs the
+arrival timeline through the STREAMING ENGINE
+(repro.federated.streaming_engine): all T waves fold through one jitted
+scan (1 dispatch instead of T), carrying the Cholesky factor of A + λI and
+refreshing the served W by two triangular solves.
 
-  * statistics mode: keep (A, b), re-solve on demand (O(d³) per refresh);
-  * online mode:     keep (A+λI)⁻¹ directly and apply Sherman–Morrison–
-                     Woodbury rank-n updates (O(n·d²) per arrival).
+It also demos WHY the engine replaced the subtractive Woodbury loop: at
+small λ the legacy path's carried A⁻¹ cancels catastrophically in fp32,
+while the factored state tracks the batch re-solve to machine precision.
 
     PYTHONPATH=src python examples/streaming_fed3r.py
 """
@@ -16,35 +20,49 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fed3r
+from repro.data.pipeline import pack_arrival_waves
 from repro.data.synthetic import make_feature_dataset
+from repro.federated.streaming_engine import (
+    ReferenceArrivalLoop,
+    StreamConfig,
+    StreamingEngine,
+    batch_equivalent,
+)
 
-D, C = 32, 10
-rng = np.random.default_rng(0)
+D, C, LAM, T = 32, 10, 1e-2, 10
 
 # one underlying distribution; the first 2000 samples are held out, the rest
-# arrive over time in cohorts (streaming clients with consistent classes)
+# arrive over time in waves (streaming clients with consistent classes)
 pool = make_feature_dataset(jax.random.PRNGKey(99), 6000, D, C, noise=2.0)
 test_x, test_y = pool.features[:2000], pool.labels[:2000]
-stream_x, stream_y = pool.features[2000:], pool.labels[2000:]
+stream_x, stream_y = np.asarray(pool.features[2000:]), np.asarray(pool.labels[2000:])
 
-stats = fed3r.init_stats(D, C)
-online = fed3r.init_online(D, C, ridge_lambda=1.0)
+# each wave: two clients with 200 fresh samples apiece
+waves = []
+for t in range(T):
+    lo = t * 400
+    waves.append([
+        (stream_x[lo : lo + 200], stream_y[lo : lo + 200]),
+        (stream_x[lo + 200 : lo + 400], stream_y[lo + 200 : lo + 400]),
+    ])
+packed = pack_arrival_waves(waves)
 
-print("arrival | samples seen | acc (re-solve) | acc (Woodbury online)")
-seen = 0
-for t in range(10):
-    # a new cohort of clients streams in with fresh data
-    lo, hi = t * 400, (t + 1) * 400
-    cx, cy = stream_x[lo:hi], stream_y[lo:hi]
-    stats = fed3r.merge(stats, fed3r.client_stats(cx, cy, C))
-    online = fed3r.woodbury_update(online, cx, cy)
-    seen += 400
+cfg = StreamConfig(n_classes=C, ridge_lambda=LAM, refresh_every=1)
+engine = StreamingEngine(cfg)
+state, trace = engine.absorb(engine.init(D), packed)  # T waves, ONE dispatch
 
-    W_batch = fed3r.solve(stats, 1.0)
-    W_online = fed3r.online_solution(online)
-    acc_b = float(fed3r.accuracy(W_batch, test_x, test_y))
-    acc_o = float(fed3r.accuracy(W_online, test_x, test_y))
-    print(f"{t:7d} | {seen:12d} | {acc_b:14.4f} | {acc_o:.4f}")
+legacy = ReferenceArrivalLoop(cfg)  # T subtractive Woodbury dispatches
+W_legacy = legacy.classifier(legacy.absorb(legacy.init(D), packed))
 
-gap = float(jnp.max(jnp.abs(fed3r.solve(stats, 1.0) - fed3r.online_solution(online))))
-print(f"\nmax |W_resolve − W_woodbury| = {gap:.2e} (recursive form is exact)")
+print(f"{packed.n_waves} waves, {packed.n_samples} samples: "
+      f"engine={engine.dispatches} dispatch, legacy loop={legacy.dispatches}")
+print(f"served accuracy: {float(fed3r.accuracy(state.W, test_x, test_y)):.4f} "
+      f"(refresh-on-arrival; staleness always 0)")
+
+W_batch, _ = batch_equivalent(packed, cfg)
+err_fac = float(jnp.max(jnp.abs(state.W - W_batch)))
+err_leg = float(jnp.max(jnp.abs(W_legacy - W_batch)))
+print(f"\nmax |W − W_batch|   factored engine: {err_fac:.2e}   "
+      f"legacy Woodbury: {err_leg:.2e}")
+print("(the subtractive fp32 path visibly diverges at small λ; "
+      "the factored form is exact to fp32 round-off)")

@@ -11,7 +11,7 @@ dry-run contract: ``XLA_FLAGS`` must be set before the first jax import).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------

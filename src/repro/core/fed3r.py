@@ -7,8 +7,10 @@ pure function over a tiny ``Fed3RStats`` pytree so the same code runs:
 * in the **distributed runtime** (``aggregate_mesh`` = ``psum`` over the
   ("pod", "data") mesh axes — the paper's client→server aggregation mapped
   onto an all-reduce; exactness of the sum *is* the paper's immunity claim),
-* in **streaming/online** mode (``woodbury_update`` — the recursive
-  least-squares formulation of Eq. (3), Sherman–Morrison–Woodbury).
+* in **streaming/online** mode (``Fed3RFactored`` — the recursive
+  least-squares formulation of Eq. (3) kept in Cholesky-factored form;
+  the subtractive Sherman–Morrison–Woodbury path ``woodbury_update`` is
+  retained as a deprecated compat path).
 
 Statistics (Eq. 5/6):
     A = Σ_k Σ_{(x,y)∈D_k} φ(x)φ(x)ᵀ          (d×d, fp32)
@@ -17,7 +19,8 @@ Solve (Eq. 4):  W* = (A + λI)⁻¹ b, then per-class column normalization.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence
+import warnings
+from typing import NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -128,29 +131,104 @@ def accuracy(W: jax.Array, features: jax.Array, labels: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Recursive (online) formulation — Sherman–Morrison–Woodbury updates
+# Recursive (online) formulation — factored rank-n updates
+# ---------------------------------------------------------------------------
+
+
+class Fed3RFactored(NamedTuple):
+    """Online RR state in Cholesky-factored form: L Lᵀ = A + λI.
+
+    The numerically stable recursive-least-squares formulation of Eq. (3):
+    every arrival performs the ADDITIVE rank-n update L ← chol(L Lᵀ + ZᵀZ)
+    (no subtraction, hence no fp32 cancellation — contrast ``Fed3ROnline``),
+    and the solution W = (A + λI)⁻¹ b is two triangular solves against L.
+    This is the state carried by the streaming arrival engine
+    (:mod:`repro.federated.streaming_engine`).
+    """
+
+    L: jax.Array  # (d, d) fp32 lower Cholesky factor of A + λI
+    b: jax.Array  # (d, C)
+
+
+def init_factored(d: int, n_classes: int, ridge_lambda: float) -> Fed3RFactored:
+    return Fed3RFactored(
+        L=jnp.sqrt(jnp.float32(ridge_lambda)) * jnp.eye(d, dtype=jnp.float32),
+        b=jnp.zeros((d, n_classes), jnp.float32),
+    )
+
+
+def factored_update(
+    state: Fed3RFactored,
+    features: jax.Array,  # (n, d)
+    labels: jax.Array,  # (n,) int32
+    mask: Optional[jax.Array] = None,  # (n,) 1.0 real / 0.0 padding
+) -> Fed3RFactored:
+    """Stable rank-n update with a new arrival batch Z (n, d):
+
+    L ← chol(L Lᵀ + ZᵀZ),  b ← b + ZᵀY.
+
+    Both Gram contributions are PSD and the ridge floor λI ⪯ L Lᵀ keeps the
+    refactorization positive definite, so the update is additions-only —
+    exact in the same sense as the batch statistics path.  The fused Pallas
+    form of the two GEMMs lives in :func:`repro.kernels.chol_gram`.
+    """
+    z, y, _ = masked_design(features, labels, state.b.shape[1], mask)
+    G = state.L @ state.L.T + z.T @ z
+    return Fed3RFactored(L=jnp.linalg.cholesky(G), b=state.b + z.T @ y)
+
+
+def factored_solution(state: Fed3RFactored, normalize: bool = True) -> jax.Array:
+    """W = (A + λI)⁻¹ b by two triangular solves against the carried factor."""
+    W = jax.scipy.linalg.cho_solve((state.L, True), state.b)
+    if normalize:
+        norms = jnp.linalg.norm(W, axis=0, keepdims=True)
+        W = W / jnp.maximum(norms, 1e-12)
+    return W
+
+
+# ---------------------------------------------------------------------------
+# Deprecated: subtractive Sherman–Morrison–Woodbury compat path
 # ---------------------------------------------------------------------------
 
 
 class Fed3ROnline(NamedTuple):
-    """Online RR state carrying A⁻¹ directly (recursive least squares).
+    """DEPRECATED online RR state carrying A⁻¹ directly.
 
-    Equivalent to the batch statistics path; useful when a deployment wants
-    O(d²) per-round updates of the *solution* instead of re-solving.
-
-    Numerical caution: with λ ≪ tr(A)/d the initial A⁻¹ = I/λ is orders of
-    magnitude larger than the converged inverse, so the subtractive Woodbury
-    update suffers catastrophic cancellation in fp32.  Production use should
-    either keep this state in float64 (enable jax_enable_x64) or prefer the
-    batch-statistics path (init_stats/client_stats/merge/solve), which is the
-    paper's Algorithm 1 and has no such issue.
+    With λ ≪ tr(A)/d the initial A⁻¹ = I/λ is orders of magnitude larger
+    than the converged inverse, so the subtractive Woodbury update suffers
+    catastrophic cancellation in fp32 (observed ~1e-2 max-abs error on W at
+    λ = 1e-2 where :class:`Fed3RFactored` stays ≤ 1e-6).  Kept only as a
+    compat path; use ``init_factored``/``factored_update`` instead.
     """
 
     Ainv: jax.Array  # (d, d) fp32 — (A + λI)⁻¹
     b: jax.Array  # (d, C)
 
 
+# fp32 cancellation becomes visible once 1/λ dwarfs the converged inverse;
+# below this λ the legacy path is known-bad even at modest sample counts
+_SMALL_LAMBDA = 0.1
+
+
+def _warn_legacy_woodbury(ridge_lambda: Optional[float] = None) -> None:
+    hazard = (
+        " At small ridge_lambda the subtractive update CANCELS"
+        " catastrophically in fp32 — expect a visibly wrong W."
+        if ridge_lambda is not None and ridge_lambda < _SMALL_LAMBDA
+        else ""
+    )
+    warnings.warn(
+        "Fed3ROnline/woodbury_update is deprecated: the subtractive Woodbury"
+        " update is numerically unstable in fp32. Use the factored state"
+        " (init_factored/factored_update/factored_solution) or the streaming"
+        " engine (repro.federated.streaming_engine)." + hazard,
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 def init_online(d: int, n_classes: int, ridge_lambda: float) -> Fed3ROnline:
+    _warn_legacy_woodbury(ridge_lambda)
     return Fed3ROnline(
         Ainv=jnp.eye(d, dtype=jnp.float32) / ridge_lambda,
         b=jnp.zeros((d, n_classes), jnp.float32),
@@ -158,9 +236,11 @@ def init_online(d: int, n_classes: int, ridge_lambda: float) -> Fed3ROnline:
 
 
 def woodbury_update(state: Fed3ROnline, features: jax.Array, labels: jax.Array) -> Fed3ROnline:
-    """Rank-n update with a new client's batch Z (n, d):
+    """DEPRECATED rank-n update with a new client's batch Z (n, d):
 
     (A + ZᵀZ)⁻¹ = A⁻¹ − A⁻¹Zᵀ (I + Z A⁻¹ Zᵀ)⁻¹ Z A⁻¹
+
+    The subtraction is the fp32 hazard; prefer :func:`factored_update`.
     """
     Z = features.astype(jnp.float32)
     n = Z.shape[0]
@@ -173,7 +253,19 @@ def woodbury_update(state: Fed3ROnline, features: jax.Array, labels: jax.Array) 
     return Fed3ROnline(Ainv=Ainv, b=b)
 
 
-def online_solution(state: Fed3ROnline, normalize: bool = True) -> jax.Array:
+def online_solution(
+    state: Union[Fed3RFactored, Fed3ROnline], normalize: bool = True
+) -> jax.Array:
+    """Solution of either online state; routes through the factored path.
+
+    Given a :class:`Fed3RFactored` this IS :func:`factored_solution` (two
+    triangular solves).  The legacy :class:`Fed3ROnline` branch is kept for
+    compatibility and warns: its W inherits the accumulated cancellation
+    error of the carried A⁻¹.
+    """
+    if isinstance(state, Fed3RFactored):
+        return factored_solution(state, normalize)
+    _warn_legacy_woodbury()
     W = state.Ainv @ state.b
     if normalize:
         norms = jnp.linalg.norm(W, axis=0, keepdims=True)

@@ -11,7 +11,6 @@ from __future__ import annotations
 from typing import Callable, Iterable, NamedTuple, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import fed3r
 

@@ -39,7 +39,6 @@ def dirichlet_partition(
     if alpha <= 0.0:
         # one class per client, classes dealt round-robin
         per_client_class = np.arange(n_clients) % n_classes
-        cursors = [0] * n_classes
         # split each class's examples evenly among clients owning it
         owners = [np.flatnonzero(per_client_class == c) for c in range(n_classes)]
         for c in range(n_classes):
@@ -65,7 +64,6 @@ def dirichlet_partition(
             start += counts[k]
 
     # guarantee min_size by stealing from the largest clients
-    sizes = np.array([len(cl) for cl in clients])
     for k in range(n_clients):
         while len(clients[k]) < min_size:
             donor = int(np.argmax([len(cl) for cl in clients]))

@@ -3,7 +3,7 @@
 ``FederatedDataset`` is the simulator's handle on a partitioned dataset:
 one global array store + per-client index lists (zero-copy views).
 
-Three packers turn ragged per-client data into fixed-shape device arrays:
+Four packers turn ragged per-client data into fixed-shape device arrays:
 
 * :func:`pack_client_batches` — ONE client padded to a global
   ``(epochs·n_batches, batch_size)`` grid; the gradient-FL local-update
@@ -18,6 +18,13 @@ Three packers turn ragged per-client data into fixed-shape device arrays:
   shape consumed by :mod:`repro.federated.engine`'s scan accumulation.
   Packing is canonical (clients sorted by id) so downstream accumulation is
   bitwise invariant to the order clients were sampled in.
+* :func:`pack_arrival_waves` — a TIMELINE of arrival waves padded into
+  ``(n_waves, clients_per_wave, max_n, ...)`` with masks; the streaming
+  shape :mod:`repro.federated.streaming_engine` scans over.  Clients are
+  canonically sorted by id WITHIN each wave (arrival order across waves is
+  the semantics of the stream and is preserved), so the packed arrays —
+  and the engine's folded state — are bitwise invariant to the order a
+  wave's concurrent arrivals were presented in.
 """
 from __future__ import annotations
 
@@ -168,6 +175,128 @@ def pack_client_shards(
     return PackedClients(
         inputs=shard(inputs), labels=shard(labels), mask=shard(mask),
         client_ids=slot_ids.reshape(n_shards, clients_per_shard),
+    )
+
+
+class PackedArrivals(NamedTuple):
+    """Arrival waves packed into dense timeline arrays for scan streaming.
+
+    ``inputs``/``labels``/``mask`` share the leading
+    ``(n_waves, clients_per_wave, max_n)`` layout; ``mask`` is 1.0 on real
+    samples, 0.0 on padding.  Empty client slots — wave-width padding, or
+    whole waves with zero arrivals — have ``client_ids == -1`` and an
+    all-zero mask, so they contribute exactly nothing to any masked
+    statistic (a zero-arrival wave is an exact no-op that still advances
+    the wave clock).
+    """
+
+    inputs: np.ndarray  # (T, P, N, ...) features or tokens
+    labels: np.ndarray  # (T, P, N) int32
+    mask: np.ndarray  # (T, P, N) float32
+    client_ids: np.ndarray  # (T, P) int32, -1 = empty slot
+
+    @property
+    def n_waves(self) -> int:
+        return self.inputs.shape[0]
+
+    @property
+    def clients_per_wave(self) -> int:
+        return self.inputs.shape[1]
+
+    @property
+    def n_clients(self) -> int:
+        return int((self.client_ids >= 0).sum())
+
+    @property
+    def n_samples(self) -> int:
+        return int(self.mask.sum())
+
+    def slice_waves(self, start: int, stop: int) -> "PackedArrivals":
+        """A contiguous sub-stream (e.g. one serving segment) — zero-copy."""
+        return PackedArrivals(
+            inputs=self.inputs[start:stop],
+            labels=self.labels[start:stop],
+            mask=self.mask[start:stop],
+            client_ids=self.client_ids[start:stop],
+        )
+
+
+def pack_arrival_waves(
+    waves: Sequence[Sequence[Tuple[np.ndarray, np.ndarray]]],
+    *,
+    client_ids: Optional[Sequence[Sequence[int]]] = None,
+    clients_per_wave: Optional[int] = None,
+    max_n: Optional[int] = None,
+    round_to: int = 8,
+    canonical_order: bool = True,
+) -> PackedArrivals:
+    """Pack a timeline ``[[(x_k, y_k), ...], ...]`` into :class:`PackedArrivals`.
+
+    Wave ``t`` holds the clients that arrive at time-step ``t`` (possibly
+    none).  All waves share one ``(clients_per_wave, max_n)`` grid — both
+    default to the timeline maxima, ``max_n`` rounded up to a multiple of
+    ``round_to`` — so the streaming engine scans a single fixed-shape array
+    and the whole stream costs one jit trace.  ``client_ids`` assigns global
+    ids per wave (default: arrival-order enumeration across the timeline).
+    With ``canonical_order`` each wave's clients are sorted by id before
+    packing, making the packed arrays bitwise invariant to the presentation
+    order of concurrent arrivals.
+    """
+    if not waves:
+        raise ValueError("pack_arrival_waves: empty timeline")
+    if client_ids is None:
+        ids_per_wave: List[np.ndarray] = []
+        nxt = 0
+        for wave in waves:
+            ids_per_wave.append(np.arange(nxt, nxt + len(wave), dtype=np.int32))
+            nxt += len(wave)
+    else:
+        if len(client_ids) != len(waves):
+            raise ValueError("client_ids timeline length mismatch")
+        ids_per_wave = [np.asarray(ids, np.int32) for ids in client_ids]
+        for wave, ids in zip(waves, ids_per_wave):
+            if len(ids) != len(wave):
+                raise ValueError("client_ids wave length mismatch")
+
+    widths = [len(wave) for wave in waves]
+    P = max(max(widths), 1) if clients_per_wave is None else clients_per_wave
+    if max(widths) > P:
+        raise ValueError(
+            f"wave with {max(widths)} arrivals exceeds clients_per_wave={P}"
+        )
+    sizes = [len(y) for wave in waves for _, y in wave]
+    need = max(sizes, default=1) if max_n is None else max_n
+    if sizes and max(sizes) > need:
+        raise ValueError(f"client with {max(sizes)} samples exceeds max_n={need}")
+    cap = -(-max(need, 1) // round_to) * round_to
+
+    x0 = None
+    for wave in waves:
+        if wave:
+            x0 = np.asarray(wave[0][0])
+            break
+    if x0 is None:
+        raise ValueError("pack_arrival_waves: no clients in any wave")
+
+    T = len(waves)
+    inputs = np.zeros((T, P, cap) + x0.shape[1:], x0.dtype)
+    labels = np.zeros((T, P, cap), np.int32)
+    mask = np.zeros((T, P, cap), np.float32)
+    slot_ids = np.full((T, P), -1, np.int32)
+    for t, (wave, ids) in enumerate(zip(waves, ids_per_wave)):
+        order = (
+            np.argsort(ids, kind="stable") if canonical_order
+            else np.arange(len(ids))
+        )
+        for slot, i in enumerate(order):
+            x, y = wave[i]
+            n_k = len(y)
+            inputs[t, slot, :n_k] = x
+            labels[t, slot, :n_k] = y
+            mask[t, slot, :n_k] = 1.0
+            slot_ids[t, slot] = ids[i]
+    return PackedArrivals(
+        inputs=inputs, labels=labels, mask=mask, client_ids=slot_ids
     )
 
 

@@ -19,11 +19,10 @@ Two generators:
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 class FeatureDataset(NamedTuple):

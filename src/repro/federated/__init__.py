@@ -19,6 +19,14 @@ from repro.federated.round_engine import (  # noqa: F401
     RoundConfig,
     RoundEngine,
 )
+from repro.federated.streaming_engine import (  # noqa: F401
+    ReferenceArrivalLoop,
+    StreamConfig,
+    StreamState,
+    StreamingEngine,
+    WaveTrace,
+)
+from repro.federated import arrivals  # noqa: F401
 from repro.federated.sampling import ClientSampler, sample_round  # noqa: F401
 from repro.federated.simulator import FLTask, run_federated  # noqa: F401
 from repro.federated.fed3r_driver import (  # noqa: F401

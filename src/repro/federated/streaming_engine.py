@@ -1,0 +1,305 @@
+"""Streaming FED3R arrival engine — batched stable Woodbury + live serving.
+
+The third engine of the triptych (batch statistics → rounds → streaming):
+the paper's recursive-least-squares formulation (Eq. 3) and its §6 future
+work — clients arriving over time with new data — promoted from a
+per-arrival Python loop over the fp32-hazardous subtractive
+``woodbury_update`` to a first-class arrival-driven runtime:
+
+* the timeline arrives as a :class:`repro.data.pipeline.PackedArrivals`
+  (padded ``(n_waves, clients_per_wave, max_n, ...)`` arrays with masks);
+* ALL T waves fold through ONE jitted ``lax.scan`` with donated state —
+  1 dispatch for the whole stream instead of the loop's T
+  (``benchmarks/bench_streaming.py``);
+* the carried state is the numerically stable FACTORED form
+  (:class:`repro.core.fed3r.Fed3RFactored` semantics): the lower Cholesky
+  factor L of A + λI, advanced per wave by the additive rank-n update
+  L ← chol(L Lᵀ + ZᵀZ) — no subtraction, no fp32 cancellation — with the
+  served classifier refreshed by two triangular solves;
+* the rank-n update GEMMs dispatch to the fused Pallas kernel
+  (:func:`repro.kernels.chol_gram`) on TPU and XLA GEMMs elsewhere,
+  mirroring the statistics engine's backend split;
+* live serving is a refresh POLICY inside the scan: ``refresh_every=1``
+  is refresh-on-arrival, ``k > 1`` refreshes every k-th wave and the
+  :class:`WaveTrace` reports the staleness metric (waves and samples
+  absorbed since the served W was last solved) per wave;
+* mesh mode mirrors ``engine.aggregate``: ``"merge"`` folds the whole
+  wave locally, ``"psum"`` all-reduces the wave statistics over the mesh
+  axes (inside shard_map) before the replicated refactorization.
+
+Exactness: each wave's clients are canonically packed (sorted by id), so
+the folded state — and the final W — is bitwise invariant to the
+presentation order of concurrent arrivals; across waves the stream order
+IS the semantics.  :class:`ReferenceArrivalLoop` preserves the seed-era
+per-arrival shape (one jitted subtractive Woodbury dispatch per wave) as
+the dispatch baseline and the numerical foil.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fed3r
+from repro.core.fed3r import Fed3RFactored
+from repro.core.random_features import RFFParams, rff_map
+from repro.data.pipeline import PackedArrivals
+from repro.kernels import chol_gram as chol_gram_kernel
+from repro.kernels import fed3r_stats as fed3r_stats_kernel
+from repro.sharding.hints import hint
+
+
+@dataclass(frozen=True)
+class StreamConfig:
+    """Static streaming-engine configuration (all trace-time constants)."""
+
+    n_classes: int
+    ridge_lambda: float
+    refresh_every: int = 1  # 1 = refresh-on-arrival; k > 1 = every k-th wave
+    normalize: bool = True  # per-class column normalization of the served W
+    use_kernel: Optional[bool] = None  # None → auto (Pallas on TPU, XLA else)
+    donate: bool = True  # donate the stream state to the scan dispatch
+    aggregation: str = "merge"  # "merge" (local fold) | "psum" (shard_map)
+    mesh_axes: Tuple[str, ...] = ()  # psum axes (aggregation="psum")
+
+
+class StreamState(NamedTuple):
+    """Donated scan carry: factored statistics + the live-served classifier."""
+
+    L: jax.Array  # (d, d) fp32 lower Cholesky factor of A + λI
+    b: jax.Array  # (d, C) fp32 class-conditional feature sums
+    n: jax.Array  # () fp32 samples absorbed
+    W: jax.Array  # (d, C) fp32 currently SERVED classifier
+    wave: jax.Array  # () int32 waves absorbed (the arrival clock)
+    stale_waves: jax.Array  # () int32 waves since W was last solved
+    stale_samples: jax.Array  # () fp32 samples absorbed since W was last solved
+
+    @property
+    def factored(self) -> Fed3RFactored:
+        """The core factored-state view (for factored_solution etc.)."""
+        return Fed3RFactored(L=self.L, b=self.b)
+
+
+class WaveTrace(NamedTuple):
+    """Per-wave scan outputs, stacked over the absorbed timeline."""
+
+    n_seen: jax.Array  # (T,) fp32 cumulative samples after each wave
+    refreshed: jax.Array  # (T,) bool — did this wave re-solve W?
+    stale_waves: jax.Array  # (T,) int32 staleness of the served W, in waves
+    stale_samples: jax.Array  # (T,) fp32 staleness of the served W, in samples
+
+
+class StreamingEngine:
+    """One-dispatch streaming FED3R over packed arrival timelines.
+
+    ``feature_fn(params, flat_inputs) -> (n, d)`` maps each wave's packed
+    raw inputs (flattened to ``(clients_per_wave·max_n, ...)``) to φ
+    features inside the scan; ``None`` means inputs already are features.
+    ``rff_params`` fuses the FED3R-RF map the same way, mirroring
+    :class:`repro.federated.engine.AccumulationEngine`.
+    """
+
+    def __init__(
+        self,
+        cfg: StreamConfig,
+        *,
+        feature_fn: Optional[Callable[[Any, jax.Array], jax.Array]] = None,
+        rff_params: Optional[RFFParams] = None,
+    ):
+        if cfg.aggregation not in ("merge", "psum"):
+            raise ValueError(f"unknown aggregation backend: {cfg.aggregation!r}")
+        if cfg.aggregation == "psum" and not cfg.mesh_axes:
+            raise ValueError("psum aggregation needs at least one mesh axis")
+        if cfg.refresh_every < 1:
+            raise ValueError(f"refresh_every must be >= 1, got {cfg.refresh_every}")
+        self.cfg = cfg
+        self.feature_fn = feature_fn
+        self.rff_params = rff_params
+        self.dispatches = 0  # host→device dispatch count (diagnostics/bench)
+        donate = (0,) if cfg.donate and jax.default_backend() != "cpu" else ()
+        self._absorb = jax.jit(self.absorb_scan, donate_argnums=donate)
+        self._refresh = jax.jit(self._refresh_impl)
+
+    def init(self, d: int) -> StreamState:
+        fac = fed3r.init_factored(d, self.cfg.n_classes, self.cfg.ridge_lambda)
+        return StreamState(
+            L=fac.L,
+            b=fac.b,
+            n=jnp.zeros((), jnp.float32),
+            W=jnp.zeros((d, self.cfg.n_classes), jnp.float32),
+            wave=jnp.zeros((), jnp.int32),
+            stale_waves=jnp.zeros((), jnp.int32),
+            stale_samples=jnp.zeros((), jnp.float32),
+        )
+
+    # ---- pure core (also usable directly inside shard_map) ----------------
+
+    def _use_kernel(self) -> bool:
+        if self.cfg.use_kernel is None:
+            return jax.default_backend() == "tpu"
+        return self.cfg.use_kernel
+
+    def _solve(self, L: jax.Array, b: jax.Array) -> jax.Array:
+        """Two triangular solves against the carried factor (the refresh)."""
+        return fed3r.factored_solution(
+            Fed3RFactored(L=L, b=b), self.cfg.normalize
+        )
+
+    def _wave_body(self, state: StreamState, wave, params: Any) -> Tuple[StreamState, Any]:
+        x, y, m = wave  # (P, N, ...), (P, N), (P, N)
+        flat = x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+        # constrain the wave batch over the ambient mesh's data axes so
+        # feature extraction data-parallelizes; exact no-op otherwise
+        flat = hint(flat, "batch")
+        feats = flat if self.feature_fn is None else self.feature_fn(params, flat)
+        if self.rff_params is not None:
+            feats = rff_map(self.rff_params, feats)
+        z, yh, nw = fed3r.masked_design(
+            feats, y.reshape(-1), self.cfg.n_classes, m.reshape(-1)
+        )
+
+        if self.cfg.aggregation == "psum":
+            # local rank-n statistics, all-reduced before the (replicated)
+            # refactorization — the fused G kernel would double-count L Lᵀ
+            if self._use_kernel():
+                S, dB = fed3r_stats_kernel(z, yh)
+            else:
+                S, dB = z.T @ z, z.T @ yh
+            S, dB, nw = jax.tree.map(
+                lambda a: jax.lax.psum(a, self.cfg.mesh_axes), (S, dB, nw)
+            )
+            G = state.L @ state.L.T + S
+        elif self._use_kernel():
+            G, dB = chol_gram_kernel(state.L, z, yh)
+        else:
+            G = state.L @ state.L.T + z.T @ z
+            dB = z.T @ yh
+
+        L = jnp.linalg.cholesky(G)
+        b = state.b + dB
+        n = state.n + nw
+        t = state.wave + 1
+
+        refresh = (t % self.cfg.refresh_every) == 0
+        W = jax.lax.cond(
+            refresh, lambda: self._solve(L, b), lambda: state.W
+        )
+        stale_w = jnp.where(refresh, 0, state.stale_waves + 1).astype(jnp.int32)
+        stale_n = jnp.where(refresh, 0.0, state.stale_samples + nw)
+        out = (n, refresh, stale_w, stale_n)
+        return StreamState(
+            L=L, b=b, n=n, W=W, wave=t, stale_waves=stale_w, stale_samples=stale_n
+        ), out
+
+    def absorb_scan(
+        self,
+        state: StreamState,
+        inputs: jax.Array,  # (T, P, N, ...)
+        labels: jax.Array,  # (T, P, N)
+        mask: jax.Array,  # (T, P, N)
+        params: Any = None,  # feature_fn parameters (backbone weights)
+    ) -> Tuple[StreamState, WaveTrace]:
+        """Fold a whole arrival timeline — the jitted one-dispatch core."""
+
+        def body(carry, wave):
+            return self._wave_body(carry, wave, params)
+
+        state, outs = jax.lax.scan(body, state, (inputs, labels, mask))
+        return state, WaveTrace(*outs)
+
+    def _refresh_impl(self, state: StreamState) -> StreamState:
+        return state._replace(
+            W=self._solve(state.L, state.b),
+            stale_waves=jnp.zeros((), jnp.int32),
+            stale_samples=jnp.zeros((), jnp.float32),
+        )
+
+    # ---- host API ---------------------------------------------------------
+
+    def absorb(
+        self, state: StreamState, packed: PackedArrivals, params: Any = None
+    ) -> Tuple[StreamState, WaveTrace]:
+        """Absorb T arrival waves in ONE jitted dispatch.
+
+        Returns the advanced state (the served classifier is ``state.W``)
+        and the per-wave :class:`WaveTrace`.
+        """
+        self.dispatches += 1
+        return self._absorb(
+            state,
+            jnp.asarray(packed.inputs),
+            jnp.asarray(packed.labels),
+            jnp.asarray(packed.mask),
+            params,
+        )
+
+    def refresh(self, state: StreamState) -> StreamState:
+        """Force a classifier re-solve now (e.g. before a query burst)."""
+        self.dispatches += 1
+        return self._refresh(state)
+
+    def classifier(self, state: StreamState) -> jax.Array:
+        """The currently SERVED classifier (possibly stale, by policy)."""
+        return state.W
+
+
+class ReferenceArrivalLoop:
+    """The seed-era per-arrival path: one jitted subtractive Woodbury
+    dispatch per wave (T dispatches for a T-wave stream).
+
+    Kept as the dispatch-count baseline the streaming engine is measured
+    against and as the numerical foil: at small λ its carried A⁻¹ cancels
+    catastrophically in fp32 (``benchmarks/bench_streaming.py`` reports the
+    divergence).  Padding rows are zero in the packed arrays, hence exact
+    no-ops in the Woodbury algebra too.
+    """
+
+    def __init__(self, cfg: StreamConfig):
+        self.cfg = cfg
+        self.dispatches = 0
+        self._update = jax.jit(fed3r.woodbury_update)
+
+    def init(self, d: int) -> fed3r.Fed3ROnline:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return fed3r.init_online(d, self.cfg.n_classes, self.cfg.ridge_lambda)
+
+    def absorb(
+        self, state: fed3r.Fed3ROnline, packed: PackedArrivals
+    ) -> fed3r.Fed3ROnline:
+        for t in range(packed.n_waves):
+            x = packed.inputs[t]
+            flat = x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+            state = self._update(
+                state, jnp.asarray(flat), jnp.asarray(packed.labels[t].reshape(-1))
+            )
+            self.dispatches += 1
+        return state
+
+    def classifier(self, state: fed3r.Fed3ROnline) -> jax.Array:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return fed3r.online_solution(state, self.cfg.normalize)
+
+
+def batch_equivalent(
+    packed: PackedArrivals, cfg: StreamConfig
+) -> Tuple[jax.Array, fed3r.Fed3RStats]:
+    """The batch re-solve over the whole timeline — the parity oracle.
+
+    Folds every wave's masked statistics with the batch path
+    (init_stats/merge/solve) and returns (W, stats); the streaming engine's
+    final refreshed W must match this to fp32 tolerance.
+    """
+    T, P, N = packed.mask.shape
+    feats = jnp.asarray(packed.inputs).reshape((T * P * N,) + packed.inputs.shape[3:])
+    stats = fed3r.client_stats(
+        feats,
+        jnp.asarray(packed.labels).reshape(-1),
+        cfg.n_classes,
+        jnp.asarray(packed.mask).reshape(-1),
+    )
+    return fed3r.solve(stats, cfg.ridge_lambda, cfg.normalize), stats

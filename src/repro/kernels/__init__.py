@@ -1,10 +1,13 @@
 """Pallas TPU kernels for the framework's compute hot spots.
 
-Three kernels, each with a pure-jnp oracle in ref.py and a jit'd public
+Four kernels, each with a pure-jnp oracle in ref.py and a jit'd public
 wrapper in ops.py:
 
   * fed3r_stats     — the paper's client-side hot spot: fused A += ZᵀZ,
                       b += ZᵀY accumulation (one blocked GEMM over [Z|Y]).
+  * chol_gram       — the streaming engine's rank-n Cholesky-Gram update
+                      G = L Lᵀ + ZᵀZ, B = ZᵀY (one two-phase blocked GEMM,
+                      no stacked HBM operand).
   * rff             — fused random-features map √(2/D)·cos(ZΩ + β).
   * flash_attention — online-softmax causal GQA attention (prefill path),
                       with sliding-window masking.
@@ -14,6 +17,7 @@ shapes; on this CPU container they are validated in interpret mode
 (pl.pallas_call(..., interpret=True) executes the kernel body on CPU).
 """
 from repro.kernels.ops import (  # noqa: F401
+    chol_gram,
     fed3r_stats,
     flash_attention,
     rff_transform,

@@ -10,6 +10,7 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro.kernels.chol_update import chol_gram_pallas
 from repro.kernels.fed3r_stats import fed3r_stats_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rff import rff_pallas
@@ -22,6 +23,13 @@ def _interpret() -> bool:
 def fed3r_stats(Z: jax.Array, Y: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Fused FED3R statistics (A, b) = (ZᵀZ, ZᵀY)."""
     return fed3r_stats_pallas(Z, Y, interpret=_interpret())
+
+
+def chol_gram(
+    L: jax.Array, Z: jax.Array, Y: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused rank-n Cholesky-Gram update (G, B) = (L Lᵀ + ZᵀZ, ZᵀY)."""
+    return chol_gram_pallas(L, Z, Y, interpret=_interpret())
 
 
 def rff_transform(Z: jax.Array, omega: jax.Array, beta: jax.Array) -> jax.Array:

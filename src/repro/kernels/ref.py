@@ -13,6 +13,15 @@ def fed3r_stats_ref(Z: jax.Array, Y: jax.Array) -> Tuple[jax.Array, jax.Array]:
     return Zf.T @ Zf, Zf.T @ Y.astype(jnp.float32)
 
 
+def chol_gram_ref(
+    L: jax.Array, Z: jax.Array, Y: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """G = L Lᵀ + ZᵀZ, B = ZᵀY in fp32. L: (d, d); Z: (n, d); Y: (n, C)."""
+    Lf = L.astype(jnp.float32)
+    Zf = Z.astype(jnp.float32)
+    return Lf @ Lf.T + Zf.T @ Zf, Zf.T @ Y.astype(jnp.float32)
+
+
 def rff_ref(Z: jax.Array, omega: jax.Array, beta: jax.Array) -> jax.Array:
     """√(2/D)·cos(ZΩ + β) in fp32. Z: (n, d); Ω: (d, D); β: (D,)."""
     D = omega.shape[1]

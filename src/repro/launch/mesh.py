@@ -10,7 +10,7 @@ first jax device query, while smoke tests must keep seeing 1 device.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Tuple
 
 import jax
 

@@ -16,12 +16,12 @@ decoder tokens.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import model as model_lib
 
 SDS = jax.ShapeDtypeStruct

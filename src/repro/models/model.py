@@ -22,7 +22,6 @@ from repro.configs.base import ModelConfig
 from repro.models import transformer as tfm
 from repro.models.layers import (
     embed_apply,
-    embed_init,
     mrope_angles,
     norm_apply,
     norm_init,
@@ -235,8 +234,6 @@ def make_cache(cfg: ModelConfig, batch: int, capacity: int) -> Any:
     if cfg.arch_type == "hybrid":
         return tfm.hybrid_cache(cfg, batch, min(capacity, cfg.local_window), dtype)
     if cfg.arch_type == "audio":
-        from repro.models.attention import init_cache
-
         self_c = tfm.stacked_attn_cache(cfg, cfg.n_layers, batch, capacity, dtype)
         F = cfg.n_audio_frames
         KV, hd = cfg.n_kv_heads, cfg.hd

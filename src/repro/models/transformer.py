@@ -14,7 +14,6 @@ wraps the scan body in train mode.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
@@ -27,18 +26,10 @@ from repro.models import rglru as rglru_mod
 from repro.models import ssm as ssm_mod
 from repro.models.attention import attn_apply, attn_init, cross_attn_apply
 from repro.models.layers import (
-    dense_init,
-    embed_apply,
-    embed_init,
-    embedding_init,
     mlp_apply,
     mlp_init,
-    mrope_angles,
     norm_apply,
     norm_init,
-    rope_angles,
-    sinusoidal_positions,
-    unembed_apply,
 )
 from repro.sharding.hints import hint
 

@@ -7,7 +7,7 @@ and (c) the centralized training driver (AdamW).
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

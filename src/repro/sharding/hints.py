@@ -16,8 +16,6 @@ mesh-agnostic.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 from jax.sharding import PartitionSpec as P
 

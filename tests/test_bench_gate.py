@@ -1,0 +1,128 @@
+"""CI benchmark-regression gate: the seeded baselines pass, doctored fail.
+
+The gate's contract (benchmarks/check_regression.py): comparing a BENCH
+result dict against its committed baseline passes when every gated metric
+honors its rule, and fails loudly when dispatch counts grow, speedups
+collapse, numerics drift, invariance flags flip, wall-times blow up, or
+the smoke config silently changes.
+"""
+import copy
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from benchmarks.check_regression import compare, flatten
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+BASELINE_DIR = REPO / "benchmarks" / "baselines"
+
+
+@pytest.fixture(scope="module")
+def baselines():
+    out = {}
+    for path in sorted(BASELINE_DIR.glob("BENCH_*.json")):
+        with open(path) as f:
+            out[path.name] = json.load(f)
+    return out
+
+
+def test_baselines_are_seeded(baselines):
+    assert {"BENCH_engine.json", "BENCH_rounds.json", "BENCH_streaming.json"} <= (
+        set(baselines)
+    )
+
+
+def test_seeded_baselines_pass_against_themselves(baselines):
+    for name, base in baselines.items():
+        assert compare(base, base) == [], name
+
+
+def test_flatten_nests_dotted_paths():
+    flat = flatten({"a": 1, "b": {"c": 2.0, "d": {"e": True}}})
+    assert flat == {"a": 1, "b.c": 2.0, "b.d.e": True}
+
+
+def test_doctored_dispatch_count_fails(baselines):
+    cur = copy.deepcopy(baselines["BENCH_streaming.json"])
+    cur["engine_dispatches"] = cur["engine_dispatches"] + 5
+    bad = compare(cur, baselines["BENCH_streaming.json"])
+    assert any("dispatch" in v for v in bad)
+
+
+def test_doctored_speedup_fails(baselines):
+    base = baselines["BENCH_rounds.json"]
+    cur = copy.deepcopy(base)
+    cur["speedup"] = base["speedup"] / 100.0
+    assert any("speedup" in v for v in compare(cur, base))
+    # within tolerance: CI noise does not fail the gate
+    cur["speedup"] = base["speedup"] * 0.5
+    assert compare(cur, base, speedup_tol=0.25) == []
+
+
+def test_doctored_numerics_fail(baselines):
+    base = baselines["BENCH_streaming.json"]
+    cur = copy.deepcopy(base)
+    cur["factored_err"] = 0.5
+    assert any("factored_err" in v for v in compare(cur, base))
+    # fp jitter under the absolute floor passes
+    cur["factored_err"] = 5e-5
+    assert compare(cur, base) == []
+
+
+def test_doctored_invariance_flag_fails(baselines):
+    base = baselines["BENCH_engine.json"]
+    cur = copy.deepcopy(base)
+    cur["bit_identical_perm"] = False
+    assert any("bit_identical_perm" in v for v in compare(cur, base))
+
+
+def test_doctored_walltime_blowup_fails(baselines):
+    base = baselines["BENCH_streaming.json"]
+    cur = copy.deepcopy(base)
+    cur["engine_s_per_stream"] = base["engine_s_per_stream"] * 100.0
+    assert any("engine_s_per_stream" in v for v in compare(cur, base))
+    cur["engine_s_per_stream"] = base["engine_s_per_stream"] * 2.0
+    assert compare(cur, base) == []  # loose tolerance: timing noise passes
+
+
+def test_changed_smoke_config_fails(baselines):
+    base = baselines["BENCH_streaming.json"]
+    cur = copy.deepcopy(base)
+    cur["waves"] = base["waves"] * 2
+    assert any("waves" in v for v in compare(cur, base))
+
+
+def test_missing_metric_fails(baselines):
+    base = baselines["BENCH_rounds.json"]
+    cur = copy.deepcopy(base)
+    del cur["engine_dispatches_per_round"]
+    assert any("missing" in v for v in compare(cur, base))
+
+
+def test_cli_passes_on_baselines_and_fails_on_doctored(tmp_path, baselines):
+    script = REPO / "benchmarks" / "check_regression.py"
+    ok = subprocess.run(
+        [sys.executable, str(script),
+         "--baseline-dir", str(BASELINE_DIR), "--current-dir", str(BASELINE_DIR)],
+        capture_output=True, text=True,
+    )
+    assert ok.returncode == 0, ok.stderr
+    for name, base in baselines.items():
+        doc = copy.deepcopy(base)
+        for key in doc:
+            if "dispatch" in key and "reference" not in key and (
+                "naive" not in key
+            ):
+                doc[key] = int(doc[key]) + 7
+        with open(tmp_path / name, "w") as f:
+            json.dump(doc, f)
+    bad = subprocess.run(
+        [sys.executable, str(script),
+         "--baseline-dir", str(BASELINE_DIR), "--current-dir", str(tmp_path)],
+        capture_output=True, text=True,
+    )
+    assert bad.returncode == 1
+    assert "REGRESSIONS" in bad.stderr

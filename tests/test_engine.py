@@ -16,7 +16,7 @@ import pytest
 
 from repro.core import fed3r, ncm
 from repro.core.random_features import rff_init, rff_map
-from repro.data.pipeline import PackedClients, pack_client_shards
+from repro.data.pipeline import pack_client_shards
 from repro.federated.engine import (
     AccumulationEngine,
     EngineConfig,

@@ -2,14 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from conftest import make_batch
 from repro.configs import get_config
 from repro.core import fed3r
 from repro.federated.secure_agg import mask_statistics, secure_aggregate
 from repro.models import build_model
-from repro.models.model import forward
 
 
 def test_int8_kv_cache_decode_close_to_fp(rng):

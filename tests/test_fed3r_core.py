@@ -133,8 +133,9 @@ def test_temperature_calibration_prefers_sharp():
     assert ces.shape[0] == len(calibration.DEFAULT_TEMPERATURES)
 
 
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
 def test_online_woodbury_matches_batch_well_conditioned():
-    """RLS path: exact on well-conditioned scales (see fed3r.py caveat)."""
+    """DEPRECATED RLS path: exact on well-conditioned scales (fed3r.py caveat)."""
     ds = make_feature_dataset(jax.random.PRNGKey(5), 200, 12, 4, noise=1.0,
                               class_scale=1.0)
     lam = 1.0

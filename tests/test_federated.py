@@ -1,5 +1,4 @@
 """Federated runtime: algorithms, sampling, FED3R drivers, cost meters."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -4,7 +4,6 @@ The paper's central claim — exact aggregation — is an algebraic property
 amenable to property-based testing: for ANY partition, ANY order, ANY
 merge tree shape, the statistics (and hence W*) are identical.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -12,7 +12,6 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.launch.shapes import abstract_params, input_specs, variant_for
 from repro.configs.base import INPUT_SHAPES
-from repro.models import model as model_lib
 from repro.sharding.specs import batch_specs, cache_specs, param_specs
 
 AX = {"model": 16, "data": 16, "pod": 2}
