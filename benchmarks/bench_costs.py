@@ -10,7 +10,7 @@ from benchmarks.common import emit
 from repro.federated.costs import INATURALIST, LANDMARKS
 
 ALGS = ("fedavg", "fedavgm", "scaffold", "fedavg-lp", "scaffold-lp",
-        "fed3r", "fed3r-rf")
+        "fed3r", "fed3r-rf", "fed3r-personalized", "personalized-ft")
 
 
 def main() -> list:
@@ -45,6 +45,23 @@ def main() -> list:
             f"appD_{ds_name}_comm_per_client_ratio", 0.0,
             f"fedavg_roundtrip_bytes={comm_grad:.3e} fed3r_once_bytes={comm_f3:.3e} "
             f"note=fed3r_pays_once_gradFL_pays_every_visit",
+        )
+
+        # multi-tenant personalized serving at planet scale (1M tenants):
+        # head-cache + retained-stats memory, and the wire cost of the
+        # closed form vs a full-model push per tenant
+        M_TENANTS = 1_000_000
+        emit(
+            f"personalize_{ds_name}_serving_memory", 0.0,
+            f"head_cache_gb_per_1M={cm.head_cache_bytes(M_TENANTS) / 1e9:.2f} "
+            f"tenant_stats_gb_per_1M={cm.tenant_stats_bytes(M_TENANTS) / 1e9:.2f}",
+        )
+        emit(
+            f"personalize_{ds_name}_wire_ratio", 0.0,
+            f"ft_roundtrip_vs_onetime_stats_upload_x="
+            f"{cm.personalization_vs_model_push_ratio():.2f} "
+            f"note=lower_bound__closed_form_marginal_upload_is_zero_"
+            f"and_ft_repays_per_refresh",
         )
     return rows
 

@@ -15,6 +15,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to paper artifacts:
   bench_engine           (engine)          packed scan vs per-client loop
   bench_rounds           (round engine)    packed FL round vs per-client loop
   bench_streaming        (streaming)       packed arrival scan vs Woodbury loop
+  bench_personalize      (personalization) batched per-tenant heads vs re-solve loop
   roofline               §Roofline         dry-run roofline table
 
 Modules listed in ``JSON_OUT`` additionally persist their result dict as a
@@ -39,6 +40,7 @@ MODULES = [
     "bench_engine",
     "bench_rounds",
     "bench_streaming",
+    "bench_personalize",
     "bench_invariance",
     "bench_ncm",
     "bench_rf",
@@ -54,6 +56,7 @@ JSON_OUT = {
     "bench_engine": "engine",
     "bench_rounds": "rounds",
     "bench_streaming": "streaming",
+    "bench_personalize": "personalize",
 }
 
 

@@ -1,0 +1,96 @@
+"""Personalized FED3R — per-tenant closed-form heads over the global state.
+
+The global ridge head is immune to heterogeneity because it ignores
+per-client structure; cross-device serving wants the opposite — per-USER
+heads.  The closed form makes both available from the SAME statistics:
+
+    W_k = (A + α_k·A_k + λI)⁻¹ (b + α_k·b_k)
+
+is a rank-n_k Cholesky update of the factored global state, so a whole
+cohort of personalized heads solves in ONE jitted dispatch
+(repro.federated.personalization), with each tenant's α_k selected inside
+that dispatch by a closed-form held-out score (α = 0 falls back to the
+global head, bitwise).
+
+The scenario: tenants DISAGREE on labels — every other tenant swaps two
+class labels (user-specific tastes / annotation conventions).  The global
+head averages the conflicting concepts away; the personalized closed form
+recovers each tenant's own mapping, and the α sweep automatically keeps
+aligned tenants on the (bitwise) global head.
+
+    PYTHONPATH=src python examples/personalized_fed3r.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fed3r
+from repro.data.pipeline import make_federated_features, pack_personal_cohort
+from repro.federated.personalization import (
+    PersonalizationEngine,
+    PersonalizeConfig,
+    ReferencePersonalizedLoop,
+    cohort_stats,
+)
+
+D, C, LAM, K = 32, 10, 1e-2, 16
+
+fed, test = make_federated_features(
+    seed=3, n=6000, d=D, n_classes=C, n_clients=K, alpha=0.3, noise=2.0
+)
+
+# every other tenant relabels two classes: its concept differs from the
+# federation's.  Half of each tenant's data builds statistics, half evaluates.
+clients, eval_xy, drifted = [], [], []
+for k in range(K):
+    cd = fed.client(k)
+    labels = np.asarray(cd.labels)
+    if k % 2 == 1:
+        rng = np.random.default_rng((3, k))
+        i, j = rng.choice(C, size=2, replace=False)
+        perm = np.arange(C)
+        perm[[i, j]] = perm[[j, i]]
+        labels = perm[labels]
+        drifted.append(k)
+    half = max(cd.n // 2, 1)
+    clients.append((cd.features[:half], labels[:half]))
+    eval_xy.append((cd.features[half:], labels[half:]))
+packed = pack_personal_cohort(clients, client_ids=list(range(K)))
+
+# the shared factored base: L Lᵀ = A + λI over ALL tenants' statistics
+stats = cohort_stats(packed, C)
+state = fed3r.Fed3RFactored(
+    L=jnp.linalg.cholesky(stats.A + LAM * jnp.eye(D, dtype=jnp.float32)),
+    b=stats.b,
+)
+W_global = fed3r.factored_solution(state)
+
+engine = PersonalizationEngine(PersonalizeConfig(
+    n_classes=C, alpha_grid=(0.0, 1.0, 4.0, 16.0, 64.0)
+))
+heads = engine.solve_heads(state, packed)  # K heads + α selection, ONE dispatch
+
+reference = ReferencePersonalizedLoop(engine.cfg)  # K+1 dispatches
+_, W_ref = reference.solve_at(state, packed, np.asarray(heads.alpha))
+
+print(f"{K} tenants ({len(drifted)} with drifted label concepts): "
+      f"engine={engine.dispatches} dispatch, "
+      f"per-client loop={reference.dispatches} (K+1)")
+print(f"engine vs per-client re-solves: "
+      f"max|ΔW| = {float(jnp.max(jnp.abs(heads.W - W_ref))):.2e}\n")
+
+print("tenant | drift | α_k   | acc(global) | acc(personalized)")
+acc_p, acc_g = [], []
+for k, (x, y) in enumerate(eval_xy):
+    x, y = jnp.asarray(x), jnp.asarray(np.asarray(y))
+    a_g = float(fed3r.accuracy(W_global, x, y))
+    a_p = float(fed3r.accuracy(heads.W[k], x, y))
+    acc_g.append(a_g)
+    acc_p.append(a_p)
+    print(f"{k:6d} | {'  yes' if k in drifted else '   no'} | "
+          f"{float(heads.alpha[k]):5.1f} | {a_g:11.4f} | {a_p:.4f}")
+
+n_global_heads = int(np.sum(np.asarray(heads.alpha) == 0.0))
+print(f"\nmean over tenants: global={np.mean(acc_g):.4f}  "
+      f"personalized={np.mean(acc_p):.4f}")
+print(f"{n_global_heads} tenants selected α=0 — their served head IS the "
+      f"global factored_solution, bitwise")

@@ -10,7 +10,12 @@ pure function over a tiny ``Fed3RStats`` pytree so the same code runs:
 * in **streaming/online** mode (``Fed3RFactored`` — the recursive
   least-squares formulation of Eq. (3) kept in Cholesky-factored form;
   the subtractive Sherman–Morrison–Woodbury path ``woodbury_update`` is
-  retained as a deprecated compat path).
+  retained as a deprecated compat path),
+* in **multi-tenant personalized** mode (``personalized_solution`` /
+  ``batched_personalized_solution`` — per-client heads
+  W_k = (A + α_k·A_k + λI)⁻¹(b + α_k·b_k) as rank-n updates of the shared
+  factored state; the batched engine with α selection is
+  :mod:`repro.federated.personalization`).
 
 Statistics (Eq. 5/6):
     A = Σ_k Σ_{(x,y)∈D_k} φ(x)φ(x)ᵀ          (d×d, fp32)
@@ -100,6 +105,17 @@ def aggregate_mesh(stats: Fed3RStats, axis_names: Sequence[str]) -> Fed3RStats:
     return jax.tree.map(lambda a: jax.lax.psum(a, tuple(axis_names)), stats)
 
 
+def normalize_columns(W: jax.Array, axis: int = 0) -> jax.Array:
+    """Per-class column normalization W_c ← W_c / max(‖W_c‖, 1e-12).
+
+    The single definition every solve path shares (batched callers pass the
+    feature axis of their layout) — the α=0 bitwise-parity contract of the
+    personalization engine depends on all sites computing exactly this.
+    """
+    norms = jnp.linalg.norm(W, axis=axis, keepdims=True)
+    return W / jnp.maximum(norms, 1e-12)
+
+
 def solve(
     stats: Fed3RStats,
     ridge_lambda: float,
@@ -116,8 +132,7 @@ def solve(
     L = jax.scipy.linalg.cho_factor(A_reg, lower=True)
     W = jax.scipy.linalg.cho_solve(L, stats.b)
     if normalize:
-        norms = jnp.linalg.norm(W, axis=0, keepdims=True)
-        W = W / jnp.maximum(norms, 1e-12)
+        W = normalize_columns(W)
     return W
 
 
@@ -143,7 +158,21 @@ class Fed3RFactored(NamedTuple):
     (no subtraction, hence no fp32 cancellation — contrast ``Fed3ROnline``),
     and the solution W = (A + λI)⁻¹ b is two triangular solves against L.
     This is the state carried by the streaming arrival engine
-    (:mod:`repro.federated.streaming_engine`).
+    (:mod:`repro.federated.streaming_engine`) and the shared base every
+    personalized head is a rank-n update away from
+    (:func:`personalized_solution`, :mod:`repro.federated.personalization`).
+
+    Fields:
+      L: (d, d) fp32 lower-triangular Cholesky factor of A + λI, where
+         A = Σ ZᵀZ is the global feature second moment over everything
+         absorbed so far and λ is the ridge coefficient baked in at
+         :func:`init_factored` time (L = √λ·I before any data).  Only the
+         lower triangle is meaningful; consumers must pass ``lower=True``
+         to the triangular solves.
+      b: (d, C) fp32 class-conditional feature sums Σ ZᵀY (Y one-hot),
+         the right-hand side of the closed-form solve.  Unlike L it is a
+         plain running sum, so it merges/psums exactly like
+         :class:`Fed3RStats` and composes with secure aggregation.
     """
 
     L: jax.Array  # (d, d) fp32 lower Cholesky factor of A + λI
@@ -181,9 +210,75 @@ def factored_solution(state: Fed3RFactored, normalize: bool = True) -> jax.Array
     """W = (A + λI)⁻¹ b by two triangular solves against the carried factor."""
     W = jax.scipy.linalg.cho_solve((state.L, True), state.b)
     if normalize:
-        norms = jnp.linalg.norm(W, axis=0, keepdims=True)
-        W = W / jnp.maximum(norms, 1e-12)
+        W = normalize_columns(W)
     return W
+
+
+# ---------------------------------------------------------------------------
+# Personalized heads — per-client closed forms over the shared factored state
+# ---------------------------------------------------------------------------
+
+
+def personalized_solution(
+    state: Fed3RFactored,
+    client: Fed3RStats,
+    alpha: Union[float, jax.Array],
+    normalize: bool = True,
+) -> jax.Array:
+    """Per-client closed-form head W_k = (A + α·A_k + λI)⁻¹ (b + α·b_k).
+
+    The personalization closed form over the shared factored state: client
+    k's own statistics (A_k, b_k) are re-weighted by α ≥ 0 on top of the
+    global sums, so the head interpolates from the heterogeneity-immune
+    global classifier (α = 0) toward a local-emphasis one.  Cost: one d×d
+    Cholesky refactorization G = L Lᵀ + α·A_k plus two triangular solves —
+    no gradient step, no retraining, and the upload is the (A_k, b_k) the
+    client already sent.
+
+    α = 0 reproduces :func:`factored_solution` BITWISE: the carried factor
+    L and right-hand side b are selected unchanged (not recomputed through
+    chol(L Lᵀ) / b + 0, whose roundings could differ), so the downstream
+    solves see identical operands.
+
+    The batched form over a packed cohort — K heads in one dispatch, with
+    per-client α selection — is
+    :class:`repro.federated.personalization.PersonalizationEngine`.
+    """
+    a = jnp.asarray(alpha, jnp.float32)
+    L_pers = jnp.linalg.cholesky(state.L @ state.L.T + a * client.A)
+    L_use = jnp.where(a == 0.0, state.L, L_pers)
+    rhs = jnp.where(a == 0.0, state.b, state.b + a * client.b)
+    W = jax.scipy.linalg.cho_solve((L_use, True), rhs)
+    if normalize:
+        W = normalize_columns(W)
+    return W
+
+
+def batched_personalized_solution(
+    state: Fed3RFactored,
+    A_k: jax.Array,  # (K, d, d) per-client second moments
+    b_k: jax.Array,  # (K, d, C) per-client class-conditional sums
+    alphas: jax.Array,  # (K,) per-client interpolation weights
+    normalize: bool = True,
+) -> jax.Array:
+    """K personalized heads (K, d, C) in one vmapped batch of solves.
+
+    Semantics per head follow :func:`personalized_solution`: α = 0 rows
+    select the global (L, b) operands unchanged, but the solve itself is
+    BATCHED, and XLA's batched triangular solve may lower differently from
+    the unbatched one — so α = 0 here agrees with ``factored_solution`` to
+    the last ulp of the solver, NOT bitwise.  When the exact-bitwise α = 0
+    fallback matters (serving), use the engine
+    (:class:`repro.federated.personalization.PersonalizationEngine`),
+    which substitutes an unbatched global solve for those rows.  The
+    global ``state`` is broadcast, so the Gram reconstructions, Cholesky
+    refactorizations, and triangular solves all batch into single XLA ops.
+    """
+    return jax.vmap(
+        lambda A, b, a: personalized_solution(
+            state, Fed3RStats(A=A, b=b, n=jnp.zeros((), jnp.float32)), a, normalize
+        )
+    )(A_k, b_k, jnp.asarray(alphas, jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -268,6 +363,5 @@ def online_solution(
     _warn_legacy_woodbury()
     W = state.Ainv @ state.b
     if normalize:
-        norms = jnp.linalg.norm(W, axis=0, keepdims=True)
-        W = W / jnp.maximum(norms, 1e-12)
+        W = normalize_columns(W)
     return W

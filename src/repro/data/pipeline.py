@@ -25,6 +25,14 @@ Four packers turn ragged per-client data into fixed-shape device arrays:
   the semantics of the stream and is preserved), so the packed arrays —
   and the engine's folded state — are bitwise invariant to the order a
   wave's concurrent arrivals were presented in.
+* :func:`pack_personal_cohort` — a COHORT of tenants padded into
+  ``(cohort, max_n, ...)`` with masks plus a per-client HOLDOUT split for
+  closed-form α selection; the personalization shape
+  :mod:`repro.federated.personalization` solves K per-tenant heads over in
+  one batched dispatch.  Built on :func:`pack_client_shards` (same
+  canonical-id-order / round_to / ``-1``-empty-slot conventions), so the
+  packed cohort — and the batched head solve — is bitwise invariant to
+  the order the tenants were requested in.
 """
 from __future__ import annotations
 
@@ -297,6 +305,98 @@ def pack_arrival_waves(
             slot_ids[t, slot] = ids[i]
     return PackedArrivals(
         inputs=inputs, labels=labels, mask=mask, client_ids=slot_ids
+    )
+
+
+class PackedPersonalCohort(NamedTuple):
+    """A tenant cohort packed for one batched personalized-head solve.
+
+    ``inputs``/``labels``/``mask``/``holdout`` share the leading
+    ``(cohort, max_n)`` layout; ``mask`` is 1.0 on real samples, 0.0 on
+    padding, and ``holdout`` ⊆ ``mask`` marks the per-client validation
+    samples the α sweep scores on (never the client's full data: index 0 of
+    every client is always train).  Empty cohort slots (width padding) have
+    ``client_ids == -1`` and all-zero masks, so their statistics vanish and
+    their head degenerates to the global solution at any α.
+    """
+
+    inputs: np.ndarray  # (K, N, ...) features or tokens
+    labels: np.ndarray  # (K, N) int32
+    mask: np.ndarray  # (K, N) float32
+    holdout: np.ndarray  # (K, N) float32, subset of mask (α-selection split)
+    client_ids: np.ndarray  # (K,) int32, -1 = empty slot
+
+    @property
+    def cohort(self) -> int:
+        return self.inputs.shape[0]
+
+    @property
+    def n_clients(self) -> int:
+        return int((self.client_ids >= 0).sum())
+
+    @property
+    def n_samples(self) -> int:
+        return int(self.mask.sum())
+
+    @property
+    def n_holdout(self) -> int:
+        return int(self.holdout.sum())
+
+
+def pack_personal_cohort(
+    clients: Sequence[Tuple[np.ndarray, np.ndarray]],
+    *,
+    client_ids: Optional[Sequence[int]] = None,
+    cohort_size: Optional[int] = None,
+    max_n: Optional[int] = None,
+    round_to: int = 8,
+    holdout_frac: float = 0.25,
+    canonical_order: bool = True,
+) -> PackedPersonalCohort:
+    """Pack ``[(x_k, y_k), ...]`` into a :class:`PackedPersonalCohort`.
+
+    Reuses :func:`pack_client_shards`'s padding conventions by construction
+    (one shard of width ``cohort_size``): canonical id sort, ``round_to``
+    sample-capacity rounding, ``-1``/zero-mask empty slots.  On top, every
+    client with ≥ 2 samples gets a deterministic non-empty HOLDOUT split —
+    every ``round(1/frac)``-th of its samples (its last sample if it has
+    fewer than that), never index 0, so at least one sample remains on
+    each side — which the personalization engine's α sweep scores against.
+    Single-sample clients get no holdout (their sweep degenerates to
+    ``alpha_grid[0]``).  The split is a pure function of the client's own
+    sample order, never of cohort position, preserving bit-invariance to
+    request order.
+    """
+    if not 0.0 <= holdout_frac < 1.0:
+        raise ValueError(f"holdout_frac must be in [0, 1), got {holdout_frac}")
+    K = len(clients) if cohort_size is None else cohort_size
+    if K < len(clients):
+        raise ValueError(f"cohort_size={K} < {len(clients)} clients")
+    shards = pack_client_shards(
+        clients,
+        clients_per_shard=K,
+        client_ids=client_ids,
+        max_n=max_n,
+        round_to=round_to,
+        canonical_order=canonical_order,
+    )
+    inputs = shards.inputs[0]
+    labels = shards.labels[0]
+    mask = shards.mask[0]
+    ids = shards.client_ids[0]
+
+    holdout = np.zeros_like(mask)
+    if holdout_frac > 0.0:
+        stride = max(int(round(1.0 / holdout_frac)), 2)
+        for k in range(K):
+            n_k = int(mask[k].sum())
+            if n_k >= 2:
+                idx = np.arange(stride - 1, n_k, stride)
+                if len(idx) == 0:  # n_k < stride: still hold out ONE sample
+                    idx = np.array([n_k - 1])
+                holdout[k, idx] = 1.0
+    return PackedPersonalCohort(
+        inputs=inputs, labels=labels, mask=mask, holdout=holdout, client_ids=ids
     )
 
 

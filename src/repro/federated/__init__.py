@@ -26,6 +26,12 @@ from repro.federated.streaming_engine import (  # noqa: F401
     StreamingEngine,
     WaveTrace,
 )
+from repro.federated.personalization import (  # noqa: F401
+    PersonalizationEngine,
+    PersonalizeConfig,
+    PersonalizedHeads,
+    ReferencePersonalizedLoop,
+)
 from repro.federated import arrivals  # noqa: F401
 from repro.federated.sampling import ClientSampler, sample_round  # noqa: F401
 from repro.federated.simulator import FLTask, run_federated  # noqa: F401

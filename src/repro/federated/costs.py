@@ -65,6 +65,17 @@ class CostModel:
             return {"down": 0.0, "up": self.D**2 + self.D * self.C}
         if a == "fed3r+ft-feat":
             return {"down": self.b, "up": self.b}
+        if a == "fed3r-personalized":
+            # the ONE-TIME (A_k, b_k) upload the per-tenant closed form is
+            # served from — the same statistics the client sent for the
+            # global head, so the MARGINAL wire cost of personalizing on
+            # top of fed3r is zero (this entry prices the shared upload,
+            # not an extra one)
+            return {"down": 0.0, "up": self.d**2 + self.d * self.C}
+        if a == "personalized-ft":
+            # the gradient-FL personalization baseline: a full model copy
+            # pushed down and a fine-tuned one uploaded back, per tenant
+            return {"down": self.m, "up": self.m}
         raise ValueError(algorithm)
 
     # --- computation per sampled client per round (FLOPs) ------------------
@@ -87,6 +98,18 @@ class CostModel:
                 self.F_phi + rf_map + 0.5 * self.D * (self.D + 1) + self.D * self.C
             )
         if a == "fed3r+ft-feat":
+            return 3 * self.E * n_k * self.F_M
+        if a == "fed3r-personalized":
+            # MARGINAL cost on top of fed3r, and it is server-side: one
+            # rank-n_k Gram update + d×d refactorization + two triangular
+            # solves per head — no client compute at all
+            return (
+                n_k * 0.5 * self.d * (self.d + 1)
+                + self.d**3 / 3.0
+                + 2.0 * self.d**2 * self.C
+            )
+        if a == "personalized-ft":
+            # per-tenant fine-tuning pass (forward + backward, E epochs)
             return 3 * self.E * n_k * self.F_M
         raise ValueError(algorithm)
 
@@ -118,6 +141,37 @@ class CostModel:
         up = (self.d**2 + self.d * self.C) * n_clients
         down = self.b * n_clients if include_extractor_push else 0.0
         return (up + down) * FP32_BYTES
+
+    # --- multi-tenant personalized serving (repro.federated.personalization)
+
+    def head_cache_bytes(self, n_tenants: int) -> float:
+        """Serving-side memory for n cached per-tenant heads (d·C fp32 each).
+
+        The LRU head cache (repro.launch.serve_heads) holds solved heads
+        only — the capacity knob trades this memory against re-solve
+        dispatches, so size it against the hot-tenant working set.
+        """
+        return n_tenants * self.head * FP32_BYTES
+
+    def tenant_stats_bytes(self, n_tenants: int) -> float:
+        """Server-side retained per-tenant statistics (A_k: d², b_k: d·C).
+
+        What the server must keep per tenant to re-solve its head after
+        every global stream advance; the d² second moment dominates, so
+        compressed/quantized stats upload (ROADMAP) attacks this figure.
+        """
+        return n_tenants * (self.d**2 + self.d * self.C) * FP32_BYTES
+
+    def personalization_vs_model_push_ratio(self) -> float:
+        """Wire cost of personalized-FT (a full model roundtrip per tenant,
+        re-paid on every refresh) over the ONE-TIME stats upload the closed
+        form reuses.  The closed form's marginal upload beyond fed3r is
+        zero, so this ratio is its conservative lower bound — and it grows
+        with every FT refresh while the closed form re-solves server-side
+        for free."""
+        closed = self.comm_per_client("fed3r-personalized")["up"]
+        ft = sum(self.comm_per_client("personalized-ft").values())
+        return ft / closed
 
 
 # Paper-configured instances (Table 4/5): d=1280 (MobileNetV2 features).

@@ -8,6 +8,10 @@ wrapper in ops.py:
   * chol_gram       — the streaming engine's rank-n Cholesky-Gram update
                       G = L Lᵀ + ZᵀZ, B = ZᵀY (one two-phase blocked GEMM,
                       no stacked HBM operand).
+  * batched_chol_gram — the personalization engine's grid-over-heads
+                      variant: K per-tenant updates G_k = L Lᵀ + Z_kᵀZ_k,
+                      B_k = Z_kᵀY_k against one shared factor L, in one
+                      pallas_call (head index = outermost grid axis).
   * rff             — fused random-features map √(2/D)·cos(ZΩ + β).
   * flash_attention — online-softmax causal GQA attention (prefill path),
                       with sliding-window masking.
@@ -17,6 +21,7 @@ shapes; on this CPU container they are validated in interpret mode
 (pl.pallas_call(..., interpret=True) executes the kernel body on CPU).
 """
 from repro.kernels.ops import (  # noqa: F401
+    batched_chol_gram,
     chol_gram,
     fed3r_stats,
     flash_attention,

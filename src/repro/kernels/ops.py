@@ -10,7 +10,7 @@ from typing import Optional, Tuple
 
 import jax
 
-from repro.kernels.chol_update import chol_gram_pallas
+from repro.kernels.chol_update import batched_chol_gram_pallas, chol_gram_pallas
 from repro.kernels.fed3r_stats import fed3r_stats_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rff import rff_pallas
@@ -30,6 +30,13 @@ def chol_gram(
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused rank-n Cholesky-Gram update (G, B) = (L Lᵀ + ZᵀZ, ZᵀY)."""
     return chol_gram_pallas(L, Z, Y, interpret=_interpret())
+
+
+def batched_chol_gram(
+    L: jax.Array, Z: jax.Array, Y: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Grid-over-heads Gram updates (G_k, B_k) = (L Lᵀ + Z_kᵀZ_k, Z_kᵀY_k)."""
+    return batched_chol_gram_pallas(L, Z, Y, interpret=_interpret())
 
 
 def rff_transform(Z: jax.Array, omega: jax.Array, beta: jax.Array) -> jax.Array:

@@ -22,6 +22,16 @@ def chol_gram_ref(
     return Lf @ Lf.T + Zf.T @ Zf, Zf.T @ Y.astype(jnp.float32)
 
 
+def batched_chol_gram_ref(
+    L: jax.Array, Z: jax.Array, Y: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """G_k = L Lᵀ + Z_kᵀZ_k, B_k = Z_kᵀY_k over K heads sharing one L.
+
+    L: (d, d); Z: (K, n, d); Y: (K, n, C).  Returns ((K, d, d), (K, d, C)).
+    """
+    return jax.vmap(chol_gram_ref, in_axes=(None, 0, 0))(L, Z, Y)
+
+
 def rff_ref(Z: jax.Array, omega: jax.Array, beta: jax.Array) -> jax.Array:
     """√(2/D)·cos(ZΩ + β) in fp32. Z: (n, d); Ω: (d, D); β: (D,)."""
     D = omega.shape[1]

@@ -77,12 +77,18 @@ def serve_stream(
     log: dict = {
         "wave": [], "clients_seen": [], "samples_seen": [],
         "stale_waves": [], "stale_samples": [], "acc_served": [],
+        # this driver serves ONE global head to all tenants; per-tenant
+        # heads (with their own cache staleness) are repro.launch.serve_heads
+        "served_head": "global",
     }
     seen = 0
     t0 = time.time()
     if verbose:
         print(f"policy={policy} refresh_every={refresh_every} "
               f"waves={packed.n_waves} clients={packed.n_clients}")
+        print("served head: GLOBAL (one W for all tenants; staleness below "
+              "is refresh-policy lag — for per-tenant heads and their cache "
+              "staleness see repro.launch.serve_heads)")
         print("wave | arrived | samples seen | stale (waves/samples) | acc(served W)")
     for lo in range(0, packed.n_waves, segment):
         chunk = packed.slice_waves(lo, min(lo + segment, packed.n_waves))
