@@ -63,6 +63,20 @@ def main() -> list:
             f"note=lower_bound__closed_form_marginal_upload_is_zero_"
             f"and_ft_repays_per_refresh",
         )
+
+        # two-stage statistics all-reduce on the production meshes
+        # (repro.federated.dist): intra-pod ICI stage vs cross-pod DCN
+        # stage for the d² payload, vs the flat single-stage all-reduce
+        for mesh_name, dp, pods in (("pod_16x16", 16, 1), ("multipod_2x16x16", 16, 2)):
+            ar = cm.two_stage_allreduce(dp, pods)
+            emit(
+                f"dist_{ds_name}_allreduce_{mesh_name}", ar["total_s"] * 1e6,
+                f"payload_mb={ar['payload_bytes'] / 1e6:.1f} "
+                f"ici_bytes_per_chip={ar['ici_bytes_per_chip']:.3e} "
+                f"dcn_bytes_per_pod={ar['dcn_bytes_per_pod']:.3e} "
+                f"ici_us={ar['ici_s'] * 1e6:.1f} dcn_us={ar['dcn_s'] * 1e6:.1f} "
+                f"flat_us={ar['flat_allreduce_s'] * 1e6:.1f}",
+            )
     return rows
 
 

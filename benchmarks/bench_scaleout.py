@@ -1,0 +1,278 @@
+"""Weak scaling of the four one-dispatch engines over simulated pod meshes.
+
+The claim under test (ISSUE 5 acceptance): with the shared distributed
+execution layer (:mod:`repro.federated.dist`) owning the shard_map, every
+engine — batch statistics, rounds, streaming, personalization — runs its
+psum backend over an N-device data-parallel mesh in EXACTLY ONE host
+dispatch per accumulate/step/absorb/solve call, at every N, with results
+matching the single-device ``merge`` backend.
+
+Weak scaling: the per-device work is held constant while N grows
+(N× clients / wave width / cohort), so on real hardware the per-call wall
+time should stay ~flat.  Simulated host devices share one CPU, so the
+times here measure dispatch/collective overhead, not speedup — the
+dispatch counts and parity errors are the gated contract, the times are
+gated only loosely.
+
+Each N runs in a SUBPROCESS: jax locks the device count at first init, so
+the parent spawns one worker per N with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the same knob the
+multi-pod dry run uses, see ``repro.launch.dryrun``).
+
+Usage: PYTHONPATH=src:. python benchmarks/bench_scaleout.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+DEVICE_COUNTS = (1, 4, 8)
+# per-device workload (weak scaling: totals are multiplied by N)
+D_FEAT = 32
+N_CLASSES = 10
+SHARDS_PER_DEV = 4
+CLIENTS_PER_SHARD = 2
+SAMPLES_PER_CLIENT = 24
+WAVES = 6
+WAVE_WIDTH_PER_DEV = 2
+COHORT_PER_DEV = 2
+TENANTS_PER_DEV = 4
+ROUND_BATCHES = 2
+ROUND_BATCH_SIZE = 16
+RIDGE_LAMBDA = 0.1
+
+
+# ---------------------------------------------------------------------------
+# worker: one device count, one process
+# ---------------------------------------------------------------------------
+
+
+def _timed_calls(fn, reps):
+    """Median-free simple average of ``reps`` warm calls (trace excluded)."""
+    import jax
+
+    jax.block_until_ready(fn())  # warm the trace
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def worker(n_dev: int, reps: int) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import fed3r
+    from repro.data.pipeline import (
+        pack_arrival_waves,
+        pack_client_shards,
+        pack_cohort_batches,
+        pack_personal_cohort,
+    )
+    from repro.federated.dist import DistConfig
+    from repro.federated.engine import AccumulationEngine, EngineConfig
+    from repro.federated.personalization import (
+        PersonalizationEngine,
+        PersonalizeConfig,
+    )
+    from repro.federated.round_engine import RoundConfig, RoundEngine
+    from repro.federated.algorithms import make_algorithm
+    from repro.federated.streaming_engine import StreamConfig, StreamingEngine
+    from repro.launch.mesh import make_host_mesh
+
+    assert len(jax.devices()) == n_dev, (len(jax.devices()), n_dev)
+    mesh = make_host_mesh()
+    dist = DistConfig(aggregation="psum", mesh=mesh, donate=False)
+    rng = np.random.default_rng(0)
+
+    def make_clients(k):
+        # features on a 1/8 grid in [-2, 2]: every product lands on a 1/64
+        # grid and every partial Gram sum stays < 2^24/64, so fp32 addition
+        # is EXACT at this scale — the psum tree order cannot change a bit,
+        # which turns "sharded == single-device" into a bitwise contract
+        # for A/b (and the factored L/W downstream of them)
+        return [
+            (
+                (rng.integers(-16, 17, size=(SAMPLES_PER_CLIENT, D_FEAT)) / 8.0
+                 ).astype(np.float32),
+                rng.integers(0, N_CLASSES, size=SAMPLES_PER_CLIENT).astype(np.int32),
+            )
+            for _ in range(k)
+        ]
+
+    out: dict = {"n_devices": n_dev}
+
+    # ---- 1) batch statistics engine --------------------------------------
+    clients = make_clients(n_dev * SHARDS_PER_DEV * CLIENTS_PER_SHARD)
+    packed = pack_client_shards(clients, CLIENTS_PER_SHARD, mesh=mesh)
+    eng = AccumulationEngine(EngineConfig(n_classes=N_CLASSES, dist=dist))
+    eng.accumulate(eng.init(D_FEAT), packed)
+    eng.dispatches = 0
+    acc = eng.accumulate(eng.init(D_FEAT), packed)
+    disp = eng.dispatches
+    ref_eng = AccumulationEngine(EngineConfig(n_classes=N_CLASSES))
+    ref = ref_eng.accumulate(ref_eng.init(D_FEAT), packed)
+    out["engine"] = {
+        "dispatches": disp,
+        "per_call_s": _timed_calls(
+            lambda: eng.accumulate(eng.init(D_FEAT), packed).stats.A, reps
+        ),
+        "err": float(jnp.max(jnp.abs(acc.stats.A - ref.stats.A))),
+        "bitwise_ab": bool(
+            np.array_equal(np.asarray(acc.stats.A), np.asarray(ref.stats.A))
+            and np.array_equal(np.asarray(acc.stats.b), np.asarray(ref.stats.b))
+        ),
+    }
+
+    # ---- 2) streaming engine ---------------------------------------------
+    waves = [make_clients(n_dev * WAVE_WIDTH_PER_DEV) for _ in range(WAVES)]
+    arrivals = pack_arrival_waves(waves, mesh=mesh)
+    scfg = dict(n_classes=N_CLASSES, ridge_lambda=RIDGE_LAMBDA)
+    s_eng = StreamingEngine(StreamConfig(**scfg, dist=dist))
+    s_eng.absorb(s_eng.init(D_FEAT), arrivals)
+    s_eng.dispatches = 0
+    state, _ = s_eng.absorb(s_eng.init(D_FEAT), arrivals)
+    s_disp = s_eng.dispatches
+    s_ref = StreamingEngine(StreamConfig(**scfg))
+    ref_state, _ = s_ref.absorb(s_ref.init(D_FEAT), arrivals)
+    out["streaming"] = {
+        "dispatches": s_disp,
+        "per_call_s": _timed_calls(
+            lambda: s_eng.absorb(s_eng.init(D_FEAT), arrivals)[0].W, reps
+        ),
+        "err": float(jnp.max(jnp.abs(state.W - ref_state.W))),
+        "bitwise_w": bool(np.array_equal(np.asarray(state.W), np.asarray(ref_state.W))),
+    }
+
+    # ---- 3) cohort round engine ------------------------------------------
+    cohort_clients = make_clients(n_dev * COHORT_PER_DEV)
+    cohort = pack_cohort_batches(
+        cohort_clients, ROUND_BATCH_SIZE, ROUND_BATCHES, mesh=mesh
+    )
+    params0 = {"W": jnp.zeros((D_FEAT, N_CLASSES), jnp.float32)}
+    freeze = jax.tree.map(lambda _: 1.0, params0)
+
+    def per_example_loss(params, batch):
+        logits = batch["x"] @ params["W"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, batch["y"][:, None].astype(jnp.int32), axis=-1
+        )[:, 0]
+        return lse - picked
+
+    rcfg = dict(algo=make_algorithm("fedavg"), client_lr=0.1,
+                n_total_clients=len(cohort_clients))
+    r_eng = RoundEngine(RoundConfig(**rcfg, dist=dist), per_example_loss, freeze)
+    r_eng.step(r_eng.init(params0), cohort)
+    r_eng.dispatches = 0
+    r_state = r_eng.step(r_eng.init(params0), cohort)
+    r_disp = r_eng.dispatches
+    r_ref = RoundEngine(RoundConfig(**rcfg), per_example_loss, freeze)
+    r_ref_state = r_ref.step(r_ref.init(params0), cohort)
+    out["rounds"] = {
+        "dispatches": r_disp,
+        "per_call_s": _timed_calls(
+            lambda: r_eng.step(r_eng.init(params0), cohort).params["W"], reps
+        ),
+        "err": float(
+            jnp.max(jnp.abs(r_state.params["W"] - r_ref_state.params["W"]))
+        ),
+    }
+
+    # ---- 4) personalization engine ---------------------------------------
+    tenants = make_clients(n_dev * TENANTS_PER_DEV)
+    pcohort = pack_personal_cohort(tenants, mesh=mesh)
+    fac = fed3r.init_factored(D_FEAT, N_CLASSES, RIDGE_LAMBDA)
+    fac = fed3r.factored_update(
+        fac,
+        jnp.asarray(np.concatenate([x for x, _ in tenants])),
+        jnp.asarray(np.concatenate([y for _, y in tenants])),
+    )
+    p_eng = PersonalizationEngine(PersonalizeConfig(n_classes=N_CLASSES, dist=dist))
+    p_eng.solve_heads(fac, pcohort)
+    p_eng.dispatches = 0
+    heads = p_eng.solve_heads(fac, pcohort)
+    p_disp = p_eng.dispatches
+    p_ref = PersonalizationEngine(PersonalizeConfig(n_classes=N_CLASSES))
+    ref_heads = p_ref.solve_heads(fac, pcohort)
+    out["personalize"] = {
+        "dispatches": p_disp,
+        "per_call_s": _timed_calls(lambda: p_eng.solve_heads(fac, pcohort).W, reps),
+        "err": float(jnp.max(jnp.abs(heads.W - ref_heads.W))),
+    }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# parent: one subprocess per device count
+# ---------------------------------------------------------------------------
+
+
+def _run_worker(n_dev: int, reps: int) -> dict:
+    env = dict(os.environ)
+    # replace (not append) any inherited device-count flag; force the host
+    # platform so simulated devices exist even on accelerator machines
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--worker",
+         "--ndev", str(n_dev), "--reps", str(reps)],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"scaleout worker (N={n_dev}) failed:\n{proc.stdout}\n{proc.stderr}"
+        )
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+ENGINES = ("engine", "streaming", "rounds", "personalize")
+
+
+def main(smoke: bool = False) -> dict:
+    from benchmarks.common import emit
+
+    reps = 1 if smoke else 3
+    result: dict = {"device_counts": list(DEVICE_COUNTS)}
+    for n_dev in DEVICE_COUNTS:
+        rec = _run_worker(n_dev, reps)
+        result[f"n{n_dev}"] = rec
+        for name in ENGINES:
+            r = rec[name]
+            emit(
+                f"scaleout_{name}_n{n_dev}", r["per_call_s"] * 1e6,
+                f"devices={n_dev} dispatches={r['dispatches']} err={r['err']:.2e}",
+            )
+            assert r["dispatches"] == 1, (
+                f"{name} at N={n_dev}: {r['dispatches']} dispatches "
+                f"(the one-dispatch contract is the point)"
+            )
+    # weak-scaling dispatch invariance across N is the gated contract
+    result["one_dispatch_at_every_n"] = all(
+        result[f"n{n}"][e]["dispatches"] == 1
+        for n in DEVICE_COUNTS for e in ENGINES
+    )
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="1 rep (CI budget)")
+    ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--ndev", type=int, default=1, help=argparse.SUPPRESS)
+    ap.add_argument("--reps", type=int, default=1, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.worker:
+        # ensure src/ is importable even when invoked by absolute path
+        here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        if os.path.isdir(os.path.join(here, "src")):
+            sys.path.insert(0, os.path.join(here, "src"))
+        print(json.dumps(worker(args.ndev, args.reps)))
+    else:
+        print(main(smoke=args.smoke))

@@ -27,6 +27,9 @@ emitting a dict — no per-benchmark code here:
 Usage:
   python benchmarks/check_regression.py            # after run.py --smoke
   python benchmarks/check_regression.py --baseline-dir benchmarks/baselines
+  python benchmarks/check_regression.py --only BENCH_scaleout.json
+                                                   # single-bench jobs (the
+                                                   # multi-device CI smoke)
 """
 from __future__ import annotations
 
@@ -109,9 +112,20 @@ def main() -> int:
     ap.add_argument("--speedup-tol", type=float, default=0.25)
     ap.add_argument("--err-tol", type=float, default=100.0)
     ap.add_argument("--err-floor", type=float, default=1e-4)
+    ap.add_argument(
+        "--only", action="append", default=None, metavar="BENCH_name.json",
+        help="gate only these baseline basenames (repeatable); default: all",
+    )
     args = ap.parse_args()
 
     paths = sorted(glob.glob(os.path.join(args.baseline_dir, "BENCH_*.json")))
+    if args.only:
+        wanted = set(args.only)
+        paths = [p for p in paths if os.path.basename(p) in wanted]
+        missing = wanted - {os.path.basename(p) for p in paths}
+        if missing:
+            print(f"no such baselines: {sorted(missing)}", file=sys.stderr)
+            return 1
     if not paths:
         print(f"no baselines under {args.baseline_dir}", file=sys.stderr)
         return 1

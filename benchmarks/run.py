@@ -16,6 +16,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to paper artifacts:
   bench_rounds           (round engine)    packed FL round vs per-client loop
   bench_streaming        (streaming)       packed arrival scan vs Woodbury loop
   bench_personalize      (personalization) batched per-tenant heads vs re-solve loop
+  bench_scaleout         (dist layer)      weak scaling of the one-dispatch engines
   roofline               §Roofline         dry-run roofline table
 
 Modules listed in ``JSON_OUT`` additionally persist their result dict as a
@@ -41,6 +42,7 @@ MODULES = [
     "bench_rounds",
     "bench_streaming",
     "bench_personalize",
+    "bench_scaleout",
     "bench_invariance",
     "bench_ncm",
     "bench_rf",
@@ -57,6 +59,7 @@ JSON_OUT = {
     "bench_rounds": "rounds",
     "bench_streaming": "streaming",
     "bench_personalize": "personalize",
+    "bench_scaleout": "scaleout",
 }
 
 

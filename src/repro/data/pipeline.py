@@ -45,6 +45,25 @@ import numpy as np
 
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import FeatureDataset, make_feature_dataset
+from repro.launch.mesh import data_parallel_size
+
+
+def _data_parallel(
+    mesh: Optional[jax.sharding.Mesh], num_shards: Optional[int]
+) -> int:
+    """The data-parallel way count a packed leading axis must divide.
+
+    Every packer pads its sharded axis to a multiple of this with fully
+    masked blocks (``client_ids == -1``, zero mask) so the dist layer
+    (:mod:`repro.federated.dist`) can split it evenly over
+    ``data_axes(mesh)``.  Masked blocks contribute exactly nothing to any
+    statistic, so padding preserves canonical-order bit-invariance.
+    """
+    if num_shards is not None:
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        return int(num_shards)
+    return 1 if mesh is None else data_parallel_size(mesh)
 
 
 @dataclass
@@ -134,6 +153,8 @@ def pack_client_shards(
     max_n: Optional[int] = None,
     round_to: int = 8,
     canonical_order: bool = True,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    num_shards: Optional[int] = None,
 ) -> PackedClients:
     """Pack ``[(inputs_k, labels_k), ...]`` into :class:`PackedClients`.
 
@@ -143,6 +164,12 @@ def pack_client_shards(
     trace across all rounds.  With ``canonical_order`` the clients are sorted
     by id before packing, which makes the packed arrays — and therefore every
     deterministic accumulation over them — invariant to sampling order.
+
+    ``mesh`` (or an explicit ``num_shards`` way count) pads the leading
+    shard axis to a multiple of the mesh's data-parallel size with fully
+    masked empty shards, so the dist layer can split the scan evenly over
+    the data axes; the padding blocks are exact no-ops, preserving the
+    bit-invariance guarantees.
     """
     if not clients:
         raise ValueError("pack_client_shards: empty client list")
@@ -161,7 +188,10 @@ def pack_client_shards(
         raise ValueError(f"client with {max(sizes)} samples exceeds max_n={need}")
     cap = -(-need // round_to) * round_to
 
-    n_slots = -(-len(clients) // clients_per_shard) * clients_per_shard
+    n_shards = -(-len(clients) // clients_per_shard)
+    dp = _data_parallel(mesh, num_shards)
+    n_shards = -(-n_shards // dp) * dp  # pad with fully-masked shards
+    n_slots = n_shards * clients_per_shard
     x0 = np.asarray(clients[order[0]][0])
     inputs = np.zeros((n_slots, cap) + x0.shape[1:], x0.dtype)
     labels = np.zeros((n_slots, cap), np.int32)
@@ -174,8 +204,6 @@ def pack_client_shards(
         labels[slot, :n_k] = y
         mask[slot, :n_k] = 1.0
         slot_ids[slot] = ids[i]
-
-    n_shards = n_slots // clients_per_shard
 
     def shard(a: np.ndarray) -> np.ndarray:
         return a.reshape((n_shards, clients_per_shard) + a.shape[1:])
@@ -237,6 +265,8 @@ def pack_arrival_waves(
     max_n: Optional[int] = None,
     round_to: int = 8,
     canonical_order: bool = True,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    num_shards: Optional[int] = None,
 ) -> PackedArrivals:
     """Pack a timeline ``[[(x_k, y_k), ...], ...]`` into :class:`PackedArrivals`.
 
@@ -249,6 +279,11 @@ def pack_arrival_waves(
     With ``canonical_order`` each wave's clients are sorted by id before
     packing, making the packed arrays bitwise invariant to the presentation
     order of concurrent arrivals.
+
+    ``mesh`` (or ``num_shards``) pads ``clients_per_wave`` — the axis the
+    dist layer shards, since the wave axis is the scanned arrival clock —
+    to a multiple of the data-parallel size with fully masked slots (exact
+    no-ops, bit-invariance preserved).
     """
     if not waves:
         raise ValueError("pack_arrival_waves: empty timeline")
@@ -272,6 +307,8 @@ def pack_arrival_waves(
         raise ValueError(
             f"wave with {max(widths)} arrivals exceeds clients_per_wave={P}"
         )
+    dp = _data_parallel(mesh, num_shards)
+    P = -(-P // dp) * dp  # pad the sharded wave-width axis
     sizes = [len(y) for wave in waves for _, y in wave]
     need = max(sizes, default=1) if max_n is None else max_n
     if sizes and max(sizes) > need:
@@ -352,6 +389,8 @@ def pack_personal_cohort(
     round_to: int = 8,
     holdout_frac: float = 0.25,
     canonical_order: bool = True,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    num_shards: Optional[int] = None,
 ) -> PackedPersonalCohort:
     """Pack ``[(x_k, y_k), ...]`` into a :class:`PackedPersonalCohort`.
 
@@ -366,12 +405,19 @@ def pack_personal_cohort(
     ``alpha_grid[0]``).  The split is a pure function of the client's own
     sample order, never of cohort position, preserving bit-invariance to
     request order.
+
+    ``mesh`` (or ``num_shards``) pads the cohort axis to a multiple of the
+    data-parallel size with empty slots whose heads degenerate to the
+    global solution — the dist layer shards the cohort over the data axes
+    and gathers the solved heads back.
     """
     if not 0.0 <= holdout_frac < 1.0:
         raise ValueError(f"holdout_frac must be in [0, 1), got {holdout_frac}")
     K = len(clients) if cohort_size is None else cohort_size
     if K < len(clients):
         raise ValueError(f"cohort_size={K} < {len(clients)} clients")
+    dp = _data_parallel(mesh, num_shards)
+    K = -(-K // dp) * dp  # pad the sharded cohort axis
     shards = pack_client_shards(
         clients,
         clients_per_shard=K,
@@ -473,6 +519,8 @@ def pack_cohort_batches(
     seed: Optional[Sequence[int]] = None,
     cohort_size: Optional[int] = None,
     canonical_order: bool = True,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    num_shards: Optional[int] = None,
 ) -> PackedCohort:
     """Stack ``[(x_k, y_k), ...]`` into a :class:`PackedCohort`.
 
@@ -484,7 +532,10 @@ def pack_cohort_batches(
     a pure function of (seed, id), never of cohort position — so the packed
     arrays (and therefore the whole aggregated round) are bitwise invariant
     to sampling order.  ``cohort_size`` pads the cohort with empty slots
-    (``client_ids == -1``, zero mask) up to a fixed vmap width.
+    (``client_ids == -1``, zero mask) up to a fixed vmap width; ``mesh``
+    (or ``num_shards``) additionally pads it to a multiple of the mesh's
+    data-parallel size so the dist layer can shard the cohort axis evenly
+    (padded slots have aggregation weight 0 — exact no-ops).
     """
     if not clients:
         raise ValueError("pack_cohort_batches: empty cohort")
@@ -496,6 +547,8 @@ def pack_cohort_batches(
     K = len(clients) if cohort_size is None else cohort_size
     if K < len(clients):
         raise ValueError(f"cohort_size={K} < {len(clients)} clients")
+    dp = _data_parallel(mesh, num_shards)
+    K = -(-K // dp) * dp  # pad the sharded cohort axis
     order = np.argsort(ids, kind="stable") if canonical_order else np.arange(len(ids))
 
     n_steps = epochs * n_batches

@@ -7,6 +7,12 @@ from repro.federated.algorithms import (  # noqa: F401
     server_optimizer_step,
     server_state_from_tree,
 )
+from repro.federated.dist import (  # noqa: F401
+    DistConfig,
+    DistContext,
+    dist_jit,
+    two_stage_psum,
+)
 from repro.federated.engine import (  # noqa: F401
     AccumulationEngine,
     EngineConfig,

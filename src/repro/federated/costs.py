@@ -162,6 +162,58 @@ class CostModel:
         """
         return n_tenants * (self.d**2 + self.d * self.C) * FP32_BYTES
 
+    # --- two-stage statistics all-reduce (repro.federated.dist) ------------
+
+    @property
+    def stats_payload_bytes(self) -> float:
+        """The per-device all-reduce payload of one statistics aggregation:
+        the d² second moment + the d·C class sums, fp32 (the n scalar and
+        class counts are noise)."""
+        return (self.d**2 + self.d * self.C) * FP32_BYTES
+
+    def two_stage_allreduce(
+        self,
+        data_parallel: int,
+        n_pods: int = 1,
+        *,
+        ici_bw: float = 50e9,  # bytes/s per chip, intra-pod ring (TPU v5e ICI)
+        dcn_bw: float = 12.5e9,  # bytes/s per pod boundary (cross-pod DCN)
+    ) -> Dict[str, float]:
+        """Per-stage wire bytes and latency of the hierarchical all-reduce.
+
+        The dist layer reduces the statistics in two stages — intra-pod
+        over ICI across ``data_parallel`` chips, then cross-pod over DCN
+        across ``n_pods`` pods (one psum per mesh axis, innermost first) —
+        so each stage is costed with the ring all-reduce wire formula
+        2·(n−1)/n · payload at its own bandwidth.  The DCN stage moves the
+        ALREADY-REDUCED payload once per pod boundary, which is why the
+        hierarchy wins: a flat all-reduce would drag every intra-pod hop
+        across the slow cross-pod wire.
+        """
+        if data_parallel < 1 or n_pods < 1:
+            raise ValueError(
+                f"data_parallel and n_pods must be >= 1, got "
+                f"{data_parallel}, {n_pods}"
+            )
+        payload = self.stats_payload_bytes
+        ici_bytes = 2.0 * (data_parallel - 1) / data_parallel * payload
+        dcn_bytes = 2.0 * (n_pods - 1) / n_pods * payload
+        ici_s = ici_bytes / ici_bw
+        dcn_s = dcn_bytes / dcn_bw
+        flat_n = data_parallel * n_pods  # flat all-reduce, DCN-bound
+        flat_s = (2.0 * (flat_n - 1) / flat_n * payload) / (
+            dcn_bw if n_pods > 1 else ici_bw
+        )
+        return {
+            "payload_bytes": payload,
+            "ici_bytes_per_chip": ici_bytes,
+            "dcn_bytes_per_pod": dcn_bytes,
+            "ici_s": ici_s,
+            "dcn_s": dcn_s,
+            "total_s": ici_s + dcn_s,
+            "flat_allreduce_s": flat_s,
+        }
+
     def personalization_vs_model_push_ratio(self) -> float:
         """Wire cost of personalized-FT (a full model roundtrip per tenant,
         re-paid on every refresh) over the ONE-TIME stats upload the closed

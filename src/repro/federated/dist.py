@@ -1,0 +1,261 @@
+"""Unified distributed execution layer shared by the four engines.
+
+Before this module, every engine (batch statistics, rounds, streaming,
+personalization) carried its own copy of the same plumbing: the
+``use_kernel`` auto-resolution, the ``donate_argnums`` backend policy, the
+``merge|psum`` aggregation validation, a host-side dispatch counter, and —
+for mesh runs — an externally-applied ``shard_map`` the caller had to
+assemble by hand.  This module owns all of it:
+
+* :func:`resolve_use_kernel` — ONE definition of the Pallas-vs-XLA auto
+  rule (compiled Pallas on TPU; XLA GEMMs elsewhere).
+* :func:`donate_argnums` — ONE definition of the donation policy (donate
+  the carried state everywhere except CPU, where XLA ignores donation and
+  warns).
+* :class:`DistConfig` — the shared distributed-execution configuration the
+  per-engine ``aggregation``/``mesh_axes``/``donate`` fields migrated
+  into.  ``mesh=None`` keeps today's behavior (plain jit; ``"psum"`` mode
+  is then for cores wrapped in an *external* shard_map).  ``mesh=Mesh``
+  makes the layer own the scale-out: the engine core is wrapped in
+  ``shard_map`` over the mesh, its batch-carrying leading axis sharded
+  over the data axes (everything but ``"model"`` — on the multi-pod
+  production mesh that is ``("pod", "data")``).
+* :class:`DistContext` — the per-engine handle: dispatch counting,
+  :meth:`DistContext.all_reduce` (identity under ``"merge"``; the
+  TWO-STAGE psum under ``"psum"``), and :meth:`DistContext.jit` which
+  builds the ``jit(shard_map(core))`` program from PartitionSpecs.
+* :func:`dist_jit` — the functional core of :meth:`DistContext.jit`.
+* :func:`two_stage_psum` — the hierarchical all-reduce: one psum per mesh
+  axis, INNERMOST FIRST, so on a ``("pod", "data")`` mesh the d² statistics
+  reduce over the fast intra-pod ICI before the small cross-pod DCN stage
+  touches the wire (the tiered device/edge/cloud aggregation of the
+  heterogeneous-FL systems literature, as collectives).  The per-stage
+  bytes/latency are costed by ``repro.federated.costs.CostModel``.
+
+Scheduling note: the engines place their all-reduce *after* the shard
+scan wherever the algebra allows (batch statistics, rounds), so feature
+extraction — the expensive leg of the scan — never serializes against
+per-step collectives and XLA's async collectives overlap the reduction
+with the epilogue.  The streaming engine's per-wave psum is inherently on
+the critical path (wave t+1's factor depends on the reduced wave-t Gram);
+its ``refresh_every`` policy bounds the solve cost instead.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+
+from repro.launch.mesh import data_axes, data_parallel_size
+from repro.sharding.specs import data_parallel_spec
+
+
+def resolve_use_kernel(use_kernel: Optional[bool]) -> bool:
+    """Auto: compiled Pallas on TPU; XLA GEMMs elsewhere (interpret mode is
+    for validation, not production CPU throughput)."""
+    return jax.default_backend() == "tpu" if use_kernel is None else use_kernel
+
+
+def donate_argnums(donate: bool, argnums: Tuple[int, ...] = (0,)) -> Tuple[int, ...]:
+    """The shared donation policy: donate the carried state to the dispatch
+    everywhere except CPU, where XLA ignores donation (and warns)."""
+    return argnums if donate and jax.default_backend() != "cpu" else ()
+
+
+def validate_backend(aggregation: str, axis_names: Tuple[str, ...]) -> None:
+    """The merge|psum validation every engine used to re-implement."""
+    if aggregation not in ("merge", "psum"):
+        raise ValueError(f"unknown aggregation backend: {aggregation!r}")
+    if aggregation == "psum" and not axis_names:
+        raise ValueError("psum aggregation needs at least one mesh axis")
+
+
+def _shard_map(fn: Callable, mesh, in_specs, out_specs) -> Callable:
+    """Version-portable shard_map (``jax.shard_map`` when public, else the
+    ``jax.experimental`` path), replication checking off: engine outputs are
+    made replicated by explicit psums, not by tracked rep-sets, and the
+    Pallas kernels inside the cores have no rep rules."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:  # older signature spells it check_rep
+            return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+    from jax.experimental.shard_map import shard_map as sm_experimental
+
+    return sm_experimental(fn, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=False)
+
+
+def two_stage_psum(tree: Any, axis_names: Tuple[str, ...]) -> Any:
+    """Hierarchical all-reduce: one psum per axis, innermost (last) first.
+
+    On the multi-pod mesh ``axis_names=("pod", "data")`` this reduces over
+    the intra-pod ICI ring first and ships only the already-reduced d²
+    statistics across the DCN — the two stages XLA can also schedule as
+    separate async collectives.  For a single axis it is exactly one psum
+    (bit-identical to the pre-refactor engines).
+    """
+    for ax in reversed(tuple(axis_names)):
+        tree = jax.tree.map(partial(jax.lax.psum, axis_name=ax), tree)
+    return tree
+
+
+def dist_jit(
+    fn: Callable,
+    *,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    in_specs: Any = None,
+    out_specs: Any = None,
+    donate: Tuple[int, ...] = (),
+) -> Callable:
+    """The one jit entry point of the engines.
+
+    ``mesh=None``: plain ``jax.jit`` (single-process; the scan carry IS the
+    aggregation).  ``mesh=Mesh``: ``jax.jit(shard_map(fn, mesh, in_specs,
+    out_specs))`` — the engine core runs as one SPMD program per device
+    over its shard of the batch-carrying axis, still ONE host dispatch.
+    ``donate`` is already-resolved argnums (see :func:`donate_argnums`).
+    """
+    if mesh is not None:
+        fn = _shard_map(fn, mesh, in_specs, out_specs)
+    return jax.jit(fn, donate_argnums=tuple(donate))
+
+
+@dataclass(frozen=True)
+class DistConfig:
+    """Shared distributed-execution configuration of the four engines.
+
+    ``aggregation``:
+      * ``"merge"`` — single-process: the associative scan/Python-level sum
+        already produced the global result; ``mesh`` must be ``None``.
+      * ``"psum"`` — distributed: local partials are all-reduced over the
+        data axes.  With ``mesh=None`` the engine core must be wrapped in
+        an EXTERNAL shard_map over ``mesh_axes`` (the pre-refactor
+        contract, kept for composability).  With ``mesh=Mesh`` the dist
+        layer owns the shard_map and the engine's host API transparently
+        scales out.
+
+    ``mesh_axes`` names the reduce axes explicitly; empty with a ``mesh``
+    defaults to every non-``"model"`` axis of the mesh (``("pod", "data")``
+    on the multi-pod production mesh).  ``donate`` is the donate-the-state
+    policy (applied through :func:`donate_argnums`).
+    """
+
+    aggregation: str = "merge"  # "merge" | "psum"
+    mesh_axes: Tuple[str, ...] = ()  # reduce axes ("psum"); () + mesh → data axes
+    mesh: Optional[jax.sharding.Mesh] = None  # shard_map mesh (dist-owned scale-out)
+    donate: bool = True  # donate the carried state to the dispatch
+
+    def __post_init__(self):
+        if self.aggregation not in ("merge", "psum"):
+            raise ValueError(f"unknown aggregation backend: {self.aggregation!r}")
+        if self.aggregation == "merge" and self.mesh is not None:
+            raise ValueError(
+                "mesh-mode execution all-reduces device partials: use "
+                "aggregation='psum' (merge is the single-process backend)"
+            )
+        axes = self.mesh_axes or (
+            data_axes(self.mesh) if self.mesh is not None else ()
+        )
+        if self.aggregation == "psum" and not axes:
+            raise ValueError("psum aggregation needs at least one mesh axis")
+        if self.mesh is not None:
+            unknown = set(axes) - set(self.mesh.axis_names)
+            if unknown:
+                raise ValueError(
+                    f"mesh_axes {sorted(unknown)} not in mesh axes "
+                    f"{self.mesh.axis_names}"
+                )
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        """The resolved reduce axes (explicit, or the mesh's data axes)."""
+        if self.mesh_axes:
+            return tuple(self.mesh_axes)
+        return data_axes(self.mesh) if self.mesh is not None else ()
+
+    @property
+    def data_shards(self) -> int:
+        """Data-parallel way count of the owned mesh (1 without a mesh)."""
+        return 1 if self.mesh is None else data_parallel_size(self.mesh)
+
+
+class DistContext:
+    """Per-engine handle on the distributed execution layer.
+
+    Owns the host→device dispatch counter every engine used to carry, the
+    aggregation backend (:meth:`all_reduce`), and program construction
+    (:meth:`jit`).  Engines keep their ``.dispatches`` attribute as a
+    property proxying this counter, so benchmarks keep working unchanged.
+    """
+
+    def __init__(self, cfg: DistConfig):
+        self.cfg = cfg
+        self.dispatches = 0  # host→device dispatch count (diagnostics/bench)
+
+    def dispatch(self) -> None:
+        """Record one host→device dispatch (call at each host-API entry)."""
+        self.dispatches += 1
+
+    def all_reduce(self, tree: Any) -> Any:
+        """The server aggregation behind one interface: identity under
+        ``"merge"`` (the local fold IS the global sum); the two-stage psum
+        over the resolved axes under ``"psum"`` (valid inside shard_map)."""
+        if self.cfg.aggregation == "merge":
+            return tree
+        return two_stage_psum(tree, self.cfg.axis_names)
+
+    def data_spec(self, axis: int = 0):
+        """The in/out PartitionSpec of a batch-carrying array: dim ``axis``
+        sharded over the data axes in mesh mode, ``None`` (don't-care —
+        :meth:`jit` ignores specs) without a mesh.  The one spec idiom
+        every engine's program construction uses."""
+        if self.cfg.mesh is None:
+            return None
+        return data_parallel_spec(self.cfg.axis_names, axis)
+
+    def jit(
+        self,
+        fn: Callable,
+        *,
+        in_specs: Any = None,
+        out_specs: Any = None,
+        donate: Optional[bool] = None,
+        donate_argnums_: Tuple[int, ...] = (0,),
+    ) -> Callable:
+        """Build the engine's one-dispatch program (see :func:`dist_jit`).
+
+        ``in_specs``/``out_specs`` are only consulted in mesh mode; the
+        donation default comes from the config (``donate=False`` opts a
+        non-carrying engine out).
+        """
+        want = self.cfg.donate if donate is None else donate
+        return dist_jit(
+            fn,
+            mesh=self.cfg.mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            donate=donate_argnums(want, donate_argnums_),
+        )
+
+
+class DistDispatchMixin:
+    """The engines' public ``.dispatches`` counter, proxied onto the owned
+    :class:`DistContext` (``self.dist``) — kept settable because the
+    benchmarks reset it between timed sections."""
+
+    dist: DistContext
+
+    @property
+    def dispatches(self) -> int:
+        """Host→device dispatch count (owned by the dist context)."""
+        return self.dist.dispatches
+
+    @dispatches.setter
+    def dispatches(self, value: int) -> None:
+        self.dist.dispatches = int(value)

@@ -12,13 +12,23 @@ dispatch loop:
   the XLA reference GEMMs elsewhere.
 * :func:`aggregate` — the two server-aggregation backends behind one
   interface: ``"merge"`` (simulator: the scan carry IS the merged sum) and
-  ``"psum"`` (mesh: all-reduce over the data axes inside shard_map).
+  ``"psum"`` (mesh: the dist layer's two-stage all-reduce over the data
+  axes inside shard_map).
 * :class:`AccumulationEngine` — packed accumulation over a
   :class:`repro.data.pipeline.PackedClients`: ONE jitted ``lax.scan`` over
   shards (donated accumulator buffers), an inner scan folding the clients of
   each shard in canonical id order.  K sampled clients cost
   ⌈K/clients_per_shard⌉ scan steps inside a single dispatch, vs the K jit
   dispatches of the naive per-client loop.
+
+Scale-out (:mod:`repro.federated.dist`): with ``DistConfig(mesh=...)`` the
+same core runs as ONE shard_map dispatch over the mesh — the shard axis is
+split over the data axes (pack with ``pack_client_shards(..., mesh=mesh)``
+so it divides), each device scans only its local shards, and the final
+A/b/class-count statistics are all-reduced hierarchically (intra-pod ICI,
+then cross-pod DCN).  The all-reduce is issued once, AFTER the scan, so
+feature extraction — the expensive leg — never serializes against
+per-shard collectives.
 
 Exactness: per-client blocks have identical padded shapes, and the
 client fold is a strict left fold in sorted-id order regardless of how
@@ -28,7 +38,7 @@ reordering AND re-sharding (different ``clients_per_shard``), the paper's
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -38,19 +48,22 @@ from repro.core import fed3r, ncm
 from repro.core.fed3r import Fed3RStats
 from repro.core.random_features import RFFParams, rff_map
 from repro.data.pipeline import PackedClients
+from repro.federated.dist import (
+    DistConfig,
+    DistContext,
+    DistDispatchMixin,
+    resolve_use_kernel,
+    two_stage_psum,
+    validate_backend,
+)
 from repro.kernels import fed3r_stats as fed3r_stats_kernel
 from repro.sharding.hints import hint
-
-
-def _resolve_use_kernel(use_kernel: Optional[bool]) -> bool:
-    # Auto: compiled Pallas on TPU; XLA GEMMs elsewhere (interpret mode is
-    # for validation, not production CPU throughput).
-    return jax.default_backend() == "tpu" if use_kernel is None else use_kernel
+from repro.sharding.specs import replicated
 
 
 def _ab(z: jax.Array, y: jax.Array, use_kernel: Optional[bool]):
     """The (A, b) GEMM backend over masked design matrices."""
-    if _resolve_use_kernel(use_kernel):
+    if resolve_use_kernel(use_kernel):
         return fed3r_stats_kernel(z, y)
     return z.T @ z, z.T @ y
 
@@ -77,16 +90,14 @@ def aggregate(
     """Server-aggregation backends behind one interface.
 
     ``"merge"``: the associative Python/scan-level sum already produced the
-    global statistics — identity.  ``"psum"``: the mesh path; all-reduce the
-    local statistics over ``axis_names`` (valid inside shard_map/pmap only).
+    global statistics — identity.  ``"psum"``: the mesh path; the dist
+    layer's two-stage all-reduce over ``axis_names`` (valid inside
+    shard_map only; one psum per axis, innermost first).
     """
+    validate_backend(backend, tuple(axis_names))
     if backend == "merge":
         return stats
-    if backend == "psum":
-        if not axis_names:
-            raise ValueError("psum aggregation needs at least one mesh axis")
-        return fed3r.aggregate_mesh(stats, tuple(axis_names))
-    raise ValueError(f"unknown aggregation backend: {backend!r}")
+    return two_stage_psum(stats, tuple(axis_names))
 
 
 class EngineStats(NamedTuple):
@@ -117,12 +128,10 @@ def to_ncm_stats(acc: EngineStats) -> ncm.NCMStats:
 class EngineConfig:
     n_classes: int
     use_kernel: Optional[bool] = None  # None → auto (Pallas on TPU, XLA else)
-    donate: bool = True  # donate the accumulator buffers to the scan
-    aggregation: str = "merge"  # "merge" | "psum"
-    mesh_axes: Tuple[str, ...] = ()  # psum axes (aggregation="psum")
+    dist: DistConfig = field(default_factory=DistConfig)  # backend/mesh/donate
 
 
-class AccumulationEngine:
+class AccumulationEngine(DistDispatchMixin):
     """Packed client-shard accumulation of FED3R statistics.
 
     ``feature_fn(params, flat_inputs) -> (n, d)`` maps the packed raw inputs
@@ -143,9 +152,16 @@ class AccumulationEngine:
         self.cfg = cfg
         self.feature_fn = feature_fn
         self.rff_params = rff_params
-        self.dispatches = 0  # host→device dispatch count (diagnostics/bench)
-        donate = (0,) if cfg.donate and jax.default_backend() != "cpu" else ()
-        self._accumulate = jax.jit(self._accumulate_impl, donate_argnums=donate)
+        self.dist = DistContext(cfg.dist)
+        # mesh mode: shard the leading (n_shards) axis of the packed arrays
+        # over the data axes; accumulator/params replicated; all-reduced
+        # output replicated
+        sharded = self.dist.data_spec()
+        self._accumulate = self.dist.jit(
+            self._accumulate_impl,
+            in_specs=(replicated(), sharded, sharded, sharded, replicated()),
+            out_specs=replicated(),
+        )
 
     def init(self, d: int) -> EngineStats:
         return engine_init(d, self.cfg.n_classes)
@@ -178,10 +194,9 @@ class AccumulationEngine:
             return carry, None
 
         acc, _ = jax.lax.scan(shard_body, acc, (inputs, labels, mask))
-        return EngineStats(
-            stats=aggregate(acc.stats, self.cfg.aggregation, self.cfg.mesh_axes),
-            class_counts=acc.class_counts,
-        )
+        # ONE all-reduce, after the scan: the whole accumulator (A, b, n AND
+        # the class counts) so every field is globally correct in mesh mode
+        return self.dist.all_reduce(acc)
 
     # ---- host API ---------------------------------------------------------
 
@@ -189,7 +204,7 @@ class AccumulationEngine:
         self, acc: EngineStats, packed: PackedClients, params: Any = None
     ) -> EngineStats:
         """Fold a packed client selection into the accumulator (one dispatch)."""
-        self.dispatches += 1
+        self.dist.dispatch()
         return self._accumulate(
             acc,
             jnp.asarray(packed.inputs),

@@ -39,7 +39,7 @@ for a K-head cohort) — as the dispatch baseline and the parity oracle
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -48,7 +48,14 @@ import jax.numpy as jnp
 from repro.core import fed3r
 from repro.core.fed3r import Fed3RFactored, Fed3RStats
 from repro.data.pipeline import PackedPersonalCohort
+from repro.federated.dist import (
+    DistConfig,
+    DistContext,
+    DistDispatchMixin,
+    resolve_use_kernel,
+)
 from repro.kernels import batched_chol_gram as batched_chol_gram_kernel
+from repro.sharding.specs import replicated
 
 
 @dataclass(frozen=True)
@@ -59,6 +66,14 @@ class PersonalizeConfig:
     clients whose holdout split is empty (single-sample clients, or
     ``holdout_frac=0`` at pack time) fall back to ``alpha_grid[0]``, so
     put the conservative default (typically ``0.0`` = global head) first.
+
+    ``dist`` is the shared distributed-execution config: with
+    ``DistConfig(aggregation="psum", mesh=...)`` the dist layer shards the
+    cohort axis over the mesh's data axes — each device solves only its
+    K/N heads against the replicated (L, b) and the solved heads are
+    gathered back (the cohort reduction is a gather, not a psum, since
+    heads are per-tenant); pack with ``pack_personal_cohort(...,
+    mesh=mesh)`` so the cohort divides.
     """
 
     n_classes: int
@@ -66,6 +81,7 @@ class PersonalizeConfig:
     normalize: bool = True  # per-class column normalization of served heads
     selection: str = "error"  # α score: "error" (0/1 held-out) | "sse" (ridge)
     use_kernel: Optional[bool] = None  # None → auto (Pallas on TPU, XLA else)
+    dist: DistConfig = field(default_factory=DistConfig)  # mesh scale-out
 
     def __post_init__(self):
         if not self.alpha_grid:
@@ -85,7 +101,7 @@ class PersonalizedHeads(NamedTuple):
     client_ids: jax.Array  # (K,) int32 tenant ids, -1 = padded slot
 
 
-class PersonalizationEngine:
+class PersonalizationEngine(DistDispatchMixin):
     """K personalized heads over a shared factored state in ONE dispatch.
 
     ``solve_heads`` sweeps the α grid per client and refits; ``solve_at``
@@ -96,16 +112,29 @@ class PersonalizationEngine:
 
     def __init__(self, cfg: PersonalizeConfig):
         self.cfg = cfg
-        self.dispatches = 0  # host→device dispatch count (diagnostics/bench)
-        self._solve = jax.jit(self._heads_impl)
-        self._solve_at = jax.jit(self._heads_at_impl)
+        self.dist = DistContext(cfg.dist)
+        # mesh mode: replicate the shared factored state, shard the cohort
+        # axis of the packed client arrays, gather the per-tenant outputs
+        # back along the same axis (no reduction: heads are per-client)
+        sharded = self.dist.data_spec()
+        common = (replicated(), replicated(), sharded, sharded, sharded, sharded)
+        self._solve = self.dist.jit(
+            self._heads_impl,
+            in_specs=common,
+            out_specs=(sharded, sharded, sharded),
+            donate=False,  # (L, b) outlive the dispatch; nothing is carried
+        )
+        self._solve_at = self.dist.jit(
+            self._heads_at_impl,
+            in_specs=common,
+            out_specs=sharded,
+            donate=False,
+        )
 
     # ---- pure core --------------------------------------------------------
 
     def _use_kernel(self) -> bool:
-        if self.cfg.use_kernel is None:
-            return jax.default_backend() == "tpu"
-        return self.cfg.use_kernel
+        return resolve_use_kernel(self.cfg.use_kernel)
 
     def _design(self, x, y, m):
         """Masked per-client designs: (K, N, d) features, (K, N, C) targets."""
@@ -211,7 +240,7 @@ class PersonalizationEngine:
         self, state: Fed3RFactored, packed: PackedPersonalCohort
     ) -> PersonalizedHeads:
         """Sweep α and solve K personalized heads in ONE jitted dispatch."""
-        self.dispatches += 1
+        self.dist.dispatch()
         W, alphas, score = self._solve(
             state.L,
             state.b,
@@ -232,7 +261,7 @@ class PersonalizationEngine:
         alphas: jax.Array,  # (K,) per-client weights, no selection sweep
     ) -> PersonalizedHeads:
         """Solve K heads at fixed per-client α_k in ONE jitted dispatch."""
-        self.dispatches += 1
+        self.dist.dispatch()
         a = jnp.asarray(alphas, jnp.float32)
         W = self._solve_at(
             state.L,

@@ -17,12 +17,14 @@ step, and the Scaffold control-variate scatter — inside ONE jitted
 * the Scaffold variates live in one stacked ``(n_clients, ...)`` table
   inside :class:`repro.federated.algorithms.ServerState`: gather by
   cohort ids on the way in, one ``.at[ids].set`` scatter on the way out;
-* mesh mode: the cohort dim is constrained over the ambient mesh's data
-  axes (:func:`repro.sharding.hints.hint`), so under GSPMD jit the
-  weighted-delta contraction lowers to the hierarchical all-reduce that
-  IS the server aggregation (``aggregation="merge"``); inside shard_map
-  use ``aggregation="psum"`` for the explicit all-reduce, mirroring
-  ``engine.aggregate``.
+* mesh mode (:mod:`repro.federated.dist`): under GSPMD jit the cohort dim
+  is constrained over the ambient mesh's data axes
+  (:func:`repro.sharding.hints.hint`) and the weighted-delta contraction
+  lowers to the hierarchical all-reduce that IS the server aggregation
+  (``aggregation="merge"``); with ``DistConfig(mesh=...)`` the dist layer
+  wraps ``round_step`` in shard_map — the cohort axis split over the data
+  axes, the weighted deltas all-reduced in two stages (intra-pod ICI,
+  then cross-pod DCN), the server step replicated — still ONE dispatch.
 
 K clients/round therefore cost 1 dispatch instead of K+1
 (``benchmarks/bench_rounds.py``); :class:`ReferenceLoop` preserves the
@@ -30,8 +32,8 @@ seed-era per-client shape as the parity/benchmark baseline.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +47,9 @@ from repro.federated.algorithms import (
     server_init,
     server_optimizer_step,
 )
+from repro.federated.dist import DistConfig, DistContext, DistDispatchMixin
 from repro.sharding.hints import hint
+from repro.sharding.specs import replicated
 
 
 @dataclass(frozen=True)
@@ -57,12 +61,10 @@ class RoundConfig:
     server_lr: float = 1.0
     weight_decay: float = 0.0
     n_total_clients: int = 0  # sizes the Scaffold cvar table / 1/N update
-    donate: bool = True  # donate the server state to the round dispatch
-    aggregation: str = "merge"  # "merge" (jit/GSPMD) | "psum" (shard_map)
-    mesh_axes: Tuple[str, ...] = ()  # psum axes (aggregation="psum")
+    dist: DistConfig = field(default_factory=DistConfig)  # backend/mesh/donate
 
 
-class RoundEngine:
+class RoundEngine(DistDispatchMixin):
     """One-dispatch federated rounds over packed cohorts.
 
     ``loss_fn(params, batch) -> (batch_size,)`` per-example losses;
@@ -77,11 +79,7 @@ class RoundEngine:
         loss_fn: Callable[[Any, Dict[str, jax.Array]], jax.Array],
         freeze: Any,
     ):
-        if cfg.aggregation not in ("merge", "psum"):
-            raise ValueError(f"unknown aggregation backend: {cfg.aggregation!r}")
-        if cfg.aggregation == "psum" and not cfg.mesh_axes:
-            raise ValueError("psum aggregation needs at least one mesh axis")
-        if cfg.aggregation == "psum" and cfg.algo.uses_cvar:
+        if cfg.dist.aggregation == "psum" and cfg.algo.uses_cvar:
             raise ValueError(
                 "scaffold needs the global cohort for the cvar scatter; "
                 "use aggregation='merge' (GSPMD) for mesh runs"
@@ -92,9 +90,15 @@ class RoundEngine:
             loss_fn, cfg.algo, lr=cfg.client_lr,
             weight_decay=cfg.weight_decay, jit=False,
         )
-        self.dispatches = 0  # host→device dispatch count (diagnostics/bench)
-        donate = (0,) if cfg.donate and jax.default_backend() != "cpu" else ()
-        self._step = jax.jit(self.round_step, donate_argnums=donate)
+        self.dist = DistContext(cfg.dist)
+        # mesh mode: shard the cohort axis of the packed batches/ids over
+        # the data axes; server state replicated in and (post all-reduce) out
+        sharded = self.dist.data_spec()
+        self._step = self.dist.jit(
+            self.round_step,
+            in_specs=(replicated(), sharded, sharded),
+            out_specs=replicated(),
+        )
 
     def init(self, params0: Any) -> ServerState:
         return server_init(
@@ -134,9 +138,10 @@ class RoundEngine:
             lambda d: jnp.tensordot(w, d, axes=1), res.delta
         )
         wsum = jnp.sum(w)
-        if self.cfg.aggregation == "psum":
-            weighted = jax.lax.psum(weighted, self.cfg.mesh_axes)
-            wsum = jax.lax.psum(wsum, self.cfg.mesh_axes)
+        # identity under "merge"; the two-stage (ICI then DCN) all-reduce of
+        # the local weighted deltas under "psum" — issued once, after the
+        # vmapped local updates
+        weighted, wsum = self.dist.all_reduce((weighted, wsum))
         wsum = jnp.maximum(wsum, 1.0)
         avg_delta = jax.tree.map(lambda d: d / wsum, weighted)
 
@@ -162,7 +167,7 @@ class RoundEngine:
 
     def step(self, state: ServerState, cohort: PackedCohort) -> ServerState:
         """Run one round over a packed cohort (ONE jitted dispatch)."""
-        self.dispatches += 1
+        self.dist.dispatch()
         batches = {k: jnp.asarray(v) for k, v in cohort.batches().items()}
         return self._step(state, batches, jnp.asarray(cohort.client_ids))
 

@@ -89,11 +89,14 @@ def pack_round(
     cfg: FederatedConfig,
     rnd: int,
     n_batches: int,
+    mesh=None,
 ):
     """The packed cohort of round ``rnd`` — a pure function of (cfg, rnd).
 
     Sampling and the per-client epoch shuffles both derive from
     (cfg.seed, rnd, client id), which is what makes stop/resume exact.
+    ``mesh`` pads the cohort axis to the mesh's data-parallel size for
+    dist-layer (shard_map) rounds — padded slots are exact no-ops.
     """
     chosen = sample_round(
         dataset.n_clients, cfg.clients_per_round, rnd,
@@ -105,7 +108,7 @@ def pack_round(
     ]
     return chosen, pack_cohort_batches(
         clients, cfg.local_batch_size, n_batches, cfg.local_epochs,
-        client_ids=chosen, seed=(cfg.seed + 7, rnd),
+        client_ids=chosen, seed=(cfg.seed + 7, rnd), mesh=mesh,
     )
 
 

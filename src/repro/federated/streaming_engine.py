@@ -23,9 +23,16 @@ per-arrival Python loop over the fp32-hazardous subtractive
   is refresh-on-arrival, ``k > 1`` refreshes every k-th wave and the
   :class:`WaveTrace` reports the staleness metric (waves and samples
   absorbed since the served W was last solved) per wave;
-* mesh mode mirrors ``engine.aggregate``: ``"merge"`` folds the whole
-  wave locally, ``"psum"`` all-reduces the wave statistics over the mesh
-  axes (inside shard_map) before the replicated refactorization.
+* mesh mode (:mod:`repro.federated.dist`) mirrors ``engine.aggregate``:
+  ``"merge"`` folds the whole wave locally; ``"psum"`` all-reduces each
+  wave's rank-n statistics over the data axes (two stages on a pod mesh:
+  intra-pod ICI, then cross-pod DCN) before the replicated
+  refactorization.  With ``DistConfig(mesh=...)`` the dist layer owns the
+  shard_map: the wave-WIDTH axis (concurrent arrivals) is split over the
+  data axes — the wave axis itself is the scanned arrival clock — so pack
+  with ``pack_arrival_waves(..., mesh=mesh)``.  Unlike the batch engine,
+  the per-wave psum is inherently on the critical path (wave t+1's factor
+  needs the reduced wave-t Gram); ``refresh_every`` bounds the solve cost.
 
 Exactness: each wave's clients are canonically packed (sorted by id), so
 the folded state — and the final W — is bitwise invariant to the
@@ -37,7 +44,7 @@ the dispatch baseline and the numerical foil.
 from __future__ import annotations
 
 import warnings
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -47,9 +54,16 @@ from repro.core import fed3r
 from repro.core.fed3r import Fed3RFactored
 from repro.core.random_features import RFFParams, rff_map
 from repro.data.pipeline import PackedArrivals
+from repro.federated.dist import (
+    DistConfig,
+    DistContext,
+    DistDispatchMixin,
+    resolve_use_kernel,
+)
 from repro.kernels import chol_gram as chol_gram_kernel
 from repro.kernels import fed3r_stats as fed3r_stats_kernel
 from repro.sharding.hints import hint
+from repro.sharding.specs import replicated
 
 
 @dataclass(frozen=True)
@@ -61,9 +75,7 @@ class StreamConfig:
     refresh_every: int = 1  # 1 = refresh-on-arrival; k > 1 = every k-th wave
     normalize: bool = True  # per-class column normalization of the served W
     use_kernel: Optional[bool] = None  # None → auto (Pallas on TPU, XLA else)
-    donate: bool = True  # donate the stream state to the scan dispatch
-    aggregation: str = "merge"  # "merge" (local fold) | "psum" (shard_map)
-    mesh_axes: Tuple[str, ...] = ()  # psum axes (aggregation="psum")
+    dist: DistConfig = field(default_factory=DistConfig)  # backend/mesh/donate
 
 
 class StreamState(NamedTuple):
@@ -92,7 +104,7 @@ class WaveTrace(NamedTuple):
     stale_samples: jax.Array  # (T,) fp32 staleness of the served W, in samples
 
 
-class StreamingEngine:
+class StreamingEngine(DistDispatchMixin):
     """One-dispatch streaming FED3R over packed arrival timelines.
 
     ``feature_fn(params, flat_inputs) -> (n, d)`` maps each wave's packed
@@ -109,18 +121,20 @@ class StreamingEngine:
         feature_fn: Optional[Callable[[Any, jax.Array], jax.Array]] = None,
         rff_params: Optional[RFFParams] = None,
     ):
-        if cfg.aggregation not in ("merge", "psum"):
-            raise ValueError(f"unknown aggregation backend: {cfg.aggregation!r}")
-        if cfg.aggregation == "psum" and not cfg.mesh_axes:
-            raise ValueError("psum aggregation needs at least one mesh axis")
         if cfg.refresh_every < 1:
             raise ValueError(f"refresh_every must be >= 1, got {cfg.refresh_every}")
         self.cfg = cfg
         self.feature_fn = feature_fn
         self.rff_params = rff_params
-        self.dispatches = 0  # host→device dispatch count (diagnostics/bench)
-        donate = (0,) if cfg.donate and jax.default_backend() != "cpu" else ()
-        self._absorb = jax.jit(self.absorb_scan, donate_argnums=donate)
+        self.dist = DistContext(cfg.dist)
+        # mesh mode: shard the wave-WIDTH axis (dim 1; dim 0 is the scanned
+        # arrival clock) over the data axes; state/params replicated
+        sharded = self.dist.data_spec(axis=1)
+        self._absorb = self.dist.jit(
+            self.absorb_scan,
+            in_specs=(replicated(), sharded, sharded, sharded, replicated()),
+            out_specs=(replicated(), replicated()),
+        )
         self._refresh = jax.jit(self._refresh_impl)
 
     def init(self, d: int) -> StreamState:
@@ -138,9 +152,7 @@ class StreamingEngine:
     # ---- pure core (also usable directly inside shard_map) ----------------
 
     def _use_kernel(self) -> bool:
-        if self.cfg.use_kernel is None:
-            return jax.default_backend() == "tpu"
-        return self.cfg.use_kernel
+        return resolve_use_kernel(self.cfg.use_kernel)
 
     def _solve(self, L: jax.Array, b: jax.Array) -> jax.Array:
         """Two triangular solves against the carried factor (the refresh)."""
@@ -161,16 +173,15 @@ class StreamingEngine:
             feats, y.reshape(-1), self.cfg.n_classes, m.reshape(-1)
         )
 
-        if self.cfg.aggregation == "psum":
-            # local rank-n statistics, all-reduced before the (replicated)
-            # refactorization — the fused G kernel would double-count L Lᵀ
+        if self.cfg.dist.aggregation == "psum":
+            # local rank-n statistics, all-reduced (two stages on a pod
+            # mesh) before the replicated refactorization — the fused G
+            # kernel would double-count L Lᵀ
             if self._use_kernel():
                 S, dB = fed3r_stats_kernel(z, yh)
             else:
                 S, dB = z.T @ z, z.T @ yh
-            S, dB, nw = jax.tree.map(
-                lambda a: jax.lax.psum(a, self.cfg.mesh_axes), (S, dB, nw)
-            )
+            S, dB, nw = self.dist.all_reduce((S, dB, nw))
             G = state.L @ state.L.T + S
         elif self._use_kernel():
             G, dB = chol_gram_kernel(state.L, z, yh)
@@ -227,7 +238,7 @@ class StreamingEngine:
         Returns the advanced state (the served classifier is ``state.W``)
         and the per-wave :class:`WaveTrace`.
         """
-        self.dispatches += 1
+        self.dist.dispatch()
         return self._absorb(
             state,
             jnp.asarray(packed.inputs),
@@ -238,7 +249,7 @@ class StreamingEngine:
 
     def refresh(self, state: StreamState) -> StreamState:
         """Force a classifier re-solve now (e.g. before a query burst)."""
-        self.dispatches += 1
+        self.dist.dispatch()
         return self._refresh(state)
 
     def classifier(self, state: StreamState) -> jax.Array:

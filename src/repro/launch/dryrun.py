@@ -1,11 +1,22 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+_N_DEV = os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+# appended AFTER any inherited flags: XLA's duplicate-flag parsing is
+# last-wins, so this is what makes the forced count override e.g. a CI
+# job-level --xla_force_host_platform_device_count
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + f" --xla_force_host_platform_device_count={_N_DEV}"
+).strip()
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) combination.
 
-The two lines above MUST run before any jax import (jax locks the device
+The lines above MUST run before any jax import (jax locks the device
 count on first init) — which is why this module must only ever be executed
-as a script/module entry point, never imported by tests.
+as a script/module entry point, never imported by tests.  The simulated
+host-device count defaults to the full multi-pod mesh (512) and can be
+overridden with ``REPRO_DRYRUN_DEVICES=N`` for smaller scale-out dry runs
+(the weak-scaling bench ``benchmarks/bench_scaleout.py`` drives the same
+flag per worker subprocess at N ∈ {1, 4, 8}).
 
 Per combination, TWO kinds of compile:
 

@@ -1,12 +1,21 @@
-"""Production meshes.
+"""Production and host meshes — the device topologies the engines run over.
 
 Target: TPU v5e pods — 256 chips/pod arranged (data=16, model=16); the
-multi-pod deployment adds a leading "pod" axis over DCN (2 pods = 512 chips).
+multi-pod deployment adds a leading "pod" axis over DCN (2 pods = 512
+chips).  The distributed execution layer (:mod:`repro.federated.dist`)
+shards the engines' batch-carrying axes over :func:`data_axes` — every
+axis but "model" — and all-reduces the d² statistics hierarchically:
+intra-pod over ICI first, then cross-pod over DCN (the two stages are
+costed separately by ``repro.federated.costs.CostModel``).
 
 ``make_production_mesh`` is a FUNCTION (not a module constant) so importing
 this module never touches jax device state — required because the dry-run
-must set ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before the
-first jax device query, while smoke tests must keep seeing 1 device.
+must set ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the
+first jax device query, while smoke tests must keep seeing 1 device.  The
+host meshes (``make_host_mesh``) build the same axis layouts over however
+many (possibly simulated) local devices exist, so tests and the weak-
+scaling bench (``benchmarks/bench_scaleout.py``) exercise the exact
+production code paths.
 """
 from __future__ import annotations
 
@@ -14,10 +23,11 @@ from typing import Tuple
 
 import jax
 
-# Hardware constants (TPU v5e) used by the roofline analysis.
+# Hardware constants (TPU v5e) used by the roofline analysis and cost model.
 PEAK_FLOPS_BF16 = 197e12  # per chip
 HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link (~per-chip effective for ring collectives)
+DCN_BW = 12.5e9  # bytes/s per pod boundary (~100 Gbps cross-pod effective)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -26,16 +36,48 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
-    """Small mesh over whatever devices exist (tests / local runs)."""
+def make_host_mesh(model_parallel: int = 1, *, pods: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / local / dry runs).
+
+    Mirrors the production axis layouts so host-device tests exercise the
+    same code paths: ``pods=1`` builds ("data", "model"); ``pods>1`` adds
+    the leading "pod" axis — ("pod", "data", "model") — over simulated
+    host devices (``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+
+    Raises ``ValueError`` (not a bare assert, which ``python -O`` strips)
+    when the device count does not factor as pods × data × model_parallel.
+    """
     n = len(jax.devices())
-    assert n % model_parallel == 0
-    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+    if model_parallel < 1 or pods < 1:
+        raise ValueError(
+            f"model_parallel and pods must be >= 1, got {model_parallel}, {pods}"
+        )
+    if n % (model_parallel * pods) != 0:
+        raise ValueError(
+            f"{n} devices do not factor as pods={pods} × data × "
+            f"model_parallel={model_parallel}"
+        )
+    data = n // (model_parallel * pods)
+    if pods > 1:
+        return jax.make_mesh(
+            (pods, data, model_parallel), ("pod", "data", "model")
+        )
+    return jax.make_mesh((data, model_parallel), ("data", "model"))
 
 
 def data_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
     """Axes carrying the batch dimension (everything but "model")."""
     return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def data_parallel_size(mesh: jax.sharding.Mesh) -> int:
+    """Product of the batch-carrying axis sizes — the shard-count the
+    packers pad the engines' leading axes to a multiple of."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in data_axes(mesh):
+        n *= sizes[a]
+    return n
 
 
 def n_chips(mesh: jax.sharding.Mesh) -> int:

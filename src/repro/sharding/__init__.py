@@ -1,6 +1,8 @@
 from repro.sharding.specs import (  # noqa: F401
     batch_specs,
     cache_specs,
+    data_parallel_spec,
     param_specs,
+    replicated,
     stats_specs,
 )

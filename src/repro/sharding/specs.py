@@ -1,4 +1,9 @@
-"""Parameter / activation / cache PartitionSpec rules for the production mesh.
+"""PartitionSpec rules for the production mesh: params, activations,
+caches, statistics — and the distributed-engine specs of the dist layer
+(:func:`replicated` / :func:`data_parallel_spec`, consumed by
+``repro.federated.dist`` to build the engines' shard_map programs: the
+batch-carrying leading axis sharded over the data axes, carried state and
+all-reduced statistics replicated).
 
 Tensor-parallel convention (Megatron-style, adapted to GSPMD):
   * attention q/k/v projections shard the (kv-)head axis on "model";
@@ -187,6 +192,34 @@ def param_specs(cfg: ModelConfig, params, axis_sizes=None, *, fsdp: bool = False
         return P()
 
     return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+# ---------------------------------------------------------------------------
+# distributed-engine specs (repro.federated.dist)
+# ---------------------------------------------------------------------------
+
+
+def replicated() -> P:
+    """The replicated spec — carried engine state, backbone params, and the
+    all-reduced outputs of the dist-layer shard_map programs."""
+    return P()
+
+
+def data_parallel_spec(axes: Sequence[str], axis: int = 0) -> P:
+    """Shard dim ``axis`` over the (possibly multiple) data axes.
+
+    The one spec shape every engine's packed arrays use under the dist
+    layer: the batch-carrying axis — shards for the statistics engine,
+    cohort for rounds/personalization, wave width for streaming — sharded
+    over ``data_axes(mesh)`` (a single axis, or ``("pod", "data")`` on the
+    multi-pod mesh, which partitions pod-major so the intra-pod psum stage
+    reduces neighboring shards first).  Trailing dims are unsharded.
+    """
+    axes = tuple(axes)
+    if not axes:
+        raise ValueError("data_parallel_spec needs at least one mesh axis")
+    entry = axes if len(axes) > 1 else axes[0]
+    return P(*((None,) * axis + (entry,)))
 
 
 # ---------------------------------------------------------------------------

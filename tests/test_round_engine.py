@@ -298,39 +298,41 @@ def test_stop_resume_reproduces_uninterrupted_run(fed_data, tmp_path, algo):
 
 
 def test_round_engine_psum_matches_merge_on_host_mesh(fed_data):
-    from jax.experimental.shard_map import shard_map
-    from jax.sharding import PartitionSpec as P
+    """The dist-layer mesh path (shard_map owned by DistContext) == merge."""
+    from repro.federated.dist import DistConfig
+    from repro.launch.mesh import make_host_mesh
 
     fed, test = fed_data
     task = linear_head_task(D, C, test.features, test.labels)
-    n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",))
+    mesh = make_host_mesh()
     _, cohort = pack_round(fed, _fc(), 0, n_batches=4)  # cohort of 4
+    # same cohort, padded so the cohort axis divides the data-parallel size
+    _, cohort_dp = pack_round(fed, _fc(), 0, n_batches=4, mesh=mesh)
 
     merge_eng = RoundEngine(_rc("fedavg"), task.per_example_loss, task.freeze)
     ref = merge_eng.step(merge_eng.init(task.params0), cohort)
 
     psum_eng = RoundEngine(
-        _rc("fedavg", aggregation="psum", mesh_axes=("data",), donate=False),
+        _rc("fedavg", dist=DistConfig(aggregation="psum", mesh=mesh, donate=False)),
         task.per_example_loss, task.freeze,
     )
-    step = shard_map(
-        psum_eng.round_step, mesh=mesh,
-        in_specs=(P(), P("data"), P("data")), out_specs=P(),
-    )
-    batches = {k: jnp.asarray(v) for k, v in cohort.batches().items()}
-    got = step(psum_eng.init(task.params0), batches, jnp.asarray(cohort.client_ids))
+    got = psum_eng.step(psum_eng.init(task.params0), cohort_dp)
+    assert psum_eng.dispatches == 1  # the shard_map program is ONE dispatch
     np.testing.assert_allclose(np.asarray(ref.params["W"]), np.asarray(got.params["W"]),
                                rtol=1e-5, atol=1e-6)
 
 
 def test_psum_config_validation(fed_data):
+    from repro.federated.dist import DistConfig
+
     fed, test = fed_data
     task = linear_head_task(D, C, test.features, test.labels)
     with pytest.raises(ValueError):
-        RoundEngine(_rc("fedavg", aggregation="psum"), task.per_example_loss, task.freeze)
+        DistConfig(aggregation="psum")  # no axes, no mesh
     with pytest.raises(ValueError):
-        RoundEngine(_rc("scaffold", aggregation="psum", mesh_axes=("data",)),
-                    task.per_example_loss, task.freeze)
-    with pytest.raises(ValueError):
-        RoundEngine(_rc("fedavg", aggregation="allgather"), task.per_example_loss, task.freeze)
+        DistConfig(aggregation="allgather")
+    with pytest.raises(ValueError):  # scaffold cvar scatter needs the cohort
+        RoundEngine(
+            _rc("scaffold", dist=DistConfig(aggregation="psum", mesh_axes=("data",))),
+            task.per_example_loss, task.freeze,
+        )

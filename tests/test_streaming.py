@@ -284,12 +284,14 @@ def test_refresh_on_arrival_never_stale():
 
 
 def test_stream_config_validation():
+    from repro.federated.dist import DistConfig
+
     with pytest.raises(ValueError):
         StreamingEngine(_cfg(refresh_every=0))
     with pytest.raises(ValueError):
-        StreamingEngine(_cfg(aggregation="psum"))
+        DistConfig(aggregation="psum")  # no axes, no mesh
     with pytest.raises(ValueError):
-        StreamingEngine(_cfg(aggregation="allgather"))
+        DistConfig(aggregation="allgather")
 
 
 # ---------------------------------------------------------------------------
@@ -298,30 +300,22 @@ def test_stream_config_validation():
 
 
 def test_streaming_psum_matches_merge_on_host_mesh():
-    from jax.experimental.shard_map import shard_map
-    from jax.sharding import PartitionSpec as P
+    """The dist-layer mesh path (shard_map owned by DistContext) == merge."""
+    from repro.federated.dist import DistConfig
+    from repro.launch.mesh import make_host_mesh
 
-    n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",))
-    # clients_per_wave divisible by the device count
-    waves = _make_stream(12, 4, max_clients=2 * n_dev)
-    packed = pack_arrival_waves(waves, clients_per_wave=2 * n_dev)
+    mesh = make_host_mesh()
+    waves = _make_stream(12, 4, max_clients=4)
+    packed = pack_arrival_waves(waves, mesh=mesh)  # wave width padded to dp
 
     merge_eng = StreamingEngine(_cfg())
     ref, _ = merge_eng.absorb(merge_eng.init(D), packed)
 
     psum_eng = StreamingEngine(
-        _cfg(aggregation="psum", mesh_axes=("data",), donate=False)
+        _cfg(dist=DistConfig(aggregation="psum", mesh=mesh, donate=False))
     )
-    absorb = shard_map(
-        psum_eng.absorb_scan, mesh=mesh,
-        in_specs=(P(), P(None, "data"), P(None, "data"), P(None, "data")),
-        out_specs=(P(), P()),
-    )
-    got, _ = absorb(
-        psum_eng.init(D), jnp.asarray(packed.inputs),
-        jnp.asarray(packed.labels), jnp.asarray(packed.mask),
-    )
+    got, _ = psum_eng.absorb(psum_eng.init(D), packed)
+    assert psum_eng.dispatches == 1  # the shard_map program is ONE dispatch
     np.testing.assert_allclose(np.asarray(ref.W), np.asarray(got.W),
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(ref.L), np.asarray(got.L),
