@@ -64,6 +64,27 @@ def main() -> list:
             f"and_ft_repays_per_refresh",
         )
 
+        # continuous-batching slot serving: the fixed slot table vs a
+        # full 1M-tenant head store, per-tick solve-vs-serve FLOPs, and
+        # the serve stage's memory-bound QPS roofline
+        S_SLOTS = 4096
+        roof = cm.serving_qps_roofline()
+        emit(
+            f"serving_{ds_name}_slot_table", 0.0,
+            f"slot_table_mb_at_{S_SLOTS}_slots="
+            f"{cm.slot_table_bytes(S_SLOTS) / 1e6:.1f} "
+            f"full_1M_head_store_gb={cm.head_cache_bytes(M_TENANTS) / 1e9:.2f} "
+            f"solve_tick_gflops_64_misses={cm.slot_solve_flops(64, n_k) / 1e9:.2f} "
+            f"serve_tick_mflops_4096_queries={cm.serve_flops(4096) / 1e6:.2f}",
+        )
+        emit(
+            f"serving_{ds_name}_qps_roofline", 0.0,
+            f"bound={roof['bound']} qps={roof['qps']:.3e} "
+            f"bytes_per_query={roof['bytes_per_query']:.0f} "
+            f"compute_qps={roof['compute_bound_qps']:.3e} "
+            f"memory_qps={roof['memory_bound_qps']:.3e}",
+        )
+
         # two-stage statistics all-reduce on the production meshes
         # (repro.federated.dist): intra-pod ICI stage vs cross-pod DCN
         # stage for the d² payload, vs the flat single-stage all-reduce

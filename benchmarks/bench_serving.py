@@ -1,0 +1,335 @@
+"""Continuous-batching slot serving vs the synchronous LRU path.
+
+Decode-style serving microbenchmark (ISSUE 6 acceptance): replay a seeded
+Zipf-skewed query trace — tenant ids drawn from a simulated
+millions-of-tenants universe (:class:`repro.federated.slots.TenantUniverse`
+folds the universe onto the synthetic federation's statistics) — against
+both serving paths, with arrival segments absorbed mid-stream:
+
+* **slots** — :class:`repro.launch.serving_engine.ServingEngine`:
+  S device-resident head slots, absorb/solve/serve one dispatch each,
+  version-segmented invalidation (an absorb re-solves ONLY the tenants it
+  touched);
+* **lru** — :class:`repro.launch.serve_heads.HeadServer` under the strict
+  policy: per-burst solve-on-miss with host-side head stacking, and every
+  absorb dirty-marks the whole cache (the pre-slot serving semantics).
+
+The trace replays TWICE per engine; the second (steady-state, traces
+compiled, table warm) pass is timed.  Claims under test:
+
+* the slot engine's serve stage costs EXACTLY one dispatch per in-flight
+  batch, independent of the tenant-universe size (checked at two universe
+  scales);
+* sustained QPS >= 2x the synchronous LRU path under skewed load with
+  interleaved absorbs;
+* strict-mode slot serving matches the synchronous server's answers
+  (bitwise for global-mode queries, <= 1e-5 for personalized ones);
+* admission control: a burst beyond ``queue_depth`` sheds at enqueue, a
+  ``deadline_ticks`` budget sheds stale queued requests, and every offered
+  query is either served or accounted shed.
+
+Usage: PYTHONPATH=src:. python benchmarks/bench_serving.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.data.pipeline import make_federated_features
+from repro.federated.arrivals import pack_schedule, poisson_schedule, zipf_traffic
+from repro.federated.personalization import (
+    PersonalizationEngine,
+    PersonalizeConfig,
+)
+from repro.federated.slots import TenantUniverse
+from repro.federated.streaming_engine import StreamConfig, StreamingEngine
+from repro.launch.serve_heads import HeadServer
+from repro.launch.serving_engine import ServingConfig, ServingEngine
+
+RIDGE_LAMBDA = 1e-2
+ZIPF_EXPONENT = 1.6  # hot head fits the slot table, long cold tail of one-off tenants
+ALPHA_GRID = (0.0, 0.5, 1.0, 2.0, 4.0)  # one grid for BOTH paths (parity)
+COALESCE = 2  # in-flight bursts one slot tick drains (continuous batching)
+
+
+def _workload(smoke: bool):
+    """The shared fixture: base federation, tenant universe, traces, arrivals."""
+    if smoke:
+        scale = dict(n=3000, d=32, n_classes=8, n_clients=32)
+        n_tenants, burst, n_bursts, n_slots = 50_000, 96, 10, 33
+        small_universe = 1_000
+    else:
+        scale = dict(n=8000, d=64, n_classes=10, n_clients=64)
+        n_tenants, burst, n_bursts, n_slots = 1_000_000, 256, 24, 65
+        small_universe = 10_000
+    fed, _ = make_federated_features(seed=0, alpha=0.1, noise=6.0, **scale)
+    universe = TenantUniverse(fed, n_tenants)
+    trace = zipf_traffic(
+        n_tenants, burst * n_bursts, exponent=ZIPF_EXPONENT, seed=7
+    )
+    # arrival segments interleaved with the query bursts: each absorb
+    # touches a FEW tenants — the strict policy still dirty-marks the
+    # whole working set, which is the gap the segmented slots close
+    schedule = poisson_schedule(fed.n_clients, n_bursts, rate=3.0, seed=3)
+    packed = pack_schedule(fed, schedule)
+    chunks = [packed.slice_waves(i, i + 1) for i in range(packed.n_waves)]
+    # per-burst query features, precomputed so host-side data prep is
+    # outside the timed path (identical for both engines anyway)
+    d = scale["d"]
+    xs_bursts = []
+    for bidx in range(n_bursts):
+        cids = trace[bidx * burst:(bidx + 1) * burst]
+        xs = np.empty((burst, d), np.float32)
+        for i, cid in enumerate(cids):
+            cd = universe.client(int(cid))
+            xs[i] = cd.features[int(cid) % cd.n]  # deterministic row choice
+        xs_bursts.append(xs)
+    return fed, universe, trace, chunks, xs_bursts, dict(
+        n_tenants=n_tenants, burst=burst, n_bursts=n_bursts, n_slots=n_slots,
+        small_universe=small_universe, **scale,
+    )
+
+
+def _replay(server, trace, chunks, xs_bursts, burst, coalesce=1):
+    """One full pass of the trace: absorb one arrival segment per burst
+    (the live-stream regime), answer the bursts, return (per-query
+    latencies, wall).
+
+    ``coalesce=1`` is the synchronous protocol (every burst answered
+    before the next arrives — the only protocol the LRU path supports).
+    ``coalesce>1`` exercises the slot engine's in-flight batching: bursts
+    enqueue as they arrive and one solve+serve tick drains ``coalesce`` of
+    them — per-query latency then INCLUDES the queueing wait (measured
+    from admission), which is the decode-style throughput/latency trade.
+    """
+    lat: list = []
+    a = 0
+    t_start = time.time()
+    n = len(xs_bursts)
+    for bidx in range(n):
+        if a < len(chunks):
+            server.absorb(chunks[a])
+            a += 1
+        cids = trace[bidx * burst:(bidx + 1) * burst]
+        if coalesce == 1:
+            t0 = time.time()
+            scores, _ = server.query(cids, xs_bursts[bidx])
+            jax.block_until_ready(scores)
+            lat.extend([time.time() - t0] * burst)
+        else:
+            server.enqueue(cids, xs_bursts[bidx])
+            if (bidx + 1) % coalesce == 0 or bidx == n - 1:
+                scores, rep = server.tick()
+                jax.block_until_ready(scores)
+                lat.extend(rep["latency_s"])
+    return np.asarray(lat), time.time() - t_start
+
+
+def _make_slots(fed, universe, cfg, n_slots, invalidation="segmented"):
+    server = ServingEngine(
+        ServingConfig(
+            n_classes=cfg["n_classes"], ridge_lambda=RIDGE_LAMBDA,
+            n_slots=n_slots, invalidation=invalidation,
+            solve_bucket=8, serve_bucket=cfg["burst"], alpha_grid=ALPHA_GRID,
+        ),
+        universe,
+    )
+    server.init(cfg["d"])
+    return server
+
+
+def _make_lru(fed, universe, cfg, capacity, invalidation="strict"):
+    server = HeadServer(
+        StreamingEngine(StreamConfig(
+            n_classes=cfg["n_classes"], ridge_lambda=RIDGE_LAMBDA,
+        )),
+        PersonalizationEngine(PersonalizeConfig(
+            n_classes=cfg["n_classes"], alpha_grid=ALPHA_GRID,
+        )),
+        universe,
+        cache_capacity=capacity,
+        cohort_round_to=8,
+        invalidation=invalidation,
+    )
+    server.init(cfg["d"])
+    return server
+
+
+def main(smoke: bool = False) -> dict:
+    fed, universe, trace, chunks, xs_bursts, cfg = _workload(smoke)
+    burst, n_bursts = cfg["burst"], cfg["n_bursts"]
+
+    # ---- timed replay: slots (segmented) vs lru (strict) -------------------
+    slots = _make_slots(fed, universe, cfg, cfg["n_slots"])
+    lru = _make_lru(fed, universe, cfg, cfg["n_slots"] - 1)
+    results = {}
+    for name, server in (("slots", slots), ("lru", lru)):
+        co = COALESCE if name == "slots" else 1
+        _replay(server, trace, chunks, xs_bursts, burst, co)  # warmup pass
+        if name == "slots":
+            ticks0, serve0, solve0 = server.ticks, server.serve_dispatches, \
+                server.solve_dispatches
+        lat, wall = _replay(server, trace, chunks, xs_bursts, burst, co)  # timed
+        results[name] = dict(
+            lat=lat, wall=wall,
+            qps=burst * n_bursts / wall,
+            p50=float(np.percentile(lat, 50)),
+            p99=float(np.percentile(lat, 99)),
+        )
+        emit(
+            f"serving_{name}_steady_state", results[name]["p50"] * 1e6,
+            f"qps={results[name]['qps']:.0f} "
+            f"p50_ms={results[name]['p50'] * 1e3:.2f} "
+            f"p99_ms={results[name]['p99'] * 1e3:.2f} "
+            f"queries={burst * n_bursts} tenants={cfg['n_tenants']}",
+        )
+    serve_ticks = slots.ticks - ticks0
+    serve_disp = slots.serve_dispatches - serve0
+    solve_disp = slots.solve_dispatches - solve0
+    disp_per_batch = serve_disp // max(serve_ticks, 1)
+    qps_speedup = results["slots"]["qps"] / results["lru"]["qps"]
+    emit(
+        "serving_slots_dispatch_budget", 0.0,
+        f"serve_dispatches={serve_disp} batches={serve_ticks} "
+        f"per_batch={disp_per_batch} solve_dispatches={solve_disp} "
+        f"qps_speedup_vs_lru={qps_speedup:.1f}x "
+        f"hit_rate={slots.hits / max(slots.hits + slots.misses, 1):.2f} "
+        f"evictions={slots.table.evictions} slot_overflow={slots.slot_overflow}",
+    )
+
+    # ---- O(1)-in-tenant-count: same serve-dispatch budget at a far smaller
+    # universe (different trace over different ids, same batch count) -------
+    small_n = cfg["small_universe"]
+    small_uni = TenantUniverse(fed, small_n)
+    small_trace = zipf_traffic(
+        small_n, burst * n_bursts, exponent=ZIPF_EXPONENT, seed=7
+    )
+    small = _make_slots(fed, small_uni, cfg, cfg["n_slots"])
+    _replay(small, small_trace, chunks, xs_bursts, burst)
+    tenant_invariant = (
+        small.serve_dispatches == small.ticks
+        and small.serve_dispatches // max(small.ticks, 1) == disp_per_batch
+    )
+    emit(
+        "serving_dispatch_tenant_invariance", 0.0,
+        f"universe_{small_n}={small.serve_dispatches // max(small.ticks, 1)} "
+        f"universe_{cfg['n_tenants']}={disp_per_batch} "
+        f"invariant={tenant_invariant}",
+    )
+
+    # ---- answer parity: strict slots vs the synchronous server ------------
+    p_slots = _make_slots(fed, universe, cfg, cfg["n_slots"], "strict")
+    p_lru = _make_lru(fed, universe, cfg, cfg["n_slots"] - 1, "strict")
+    parity_err = 0.0
+    global_bitwise = True
+    modes_match = True
+    # overflow-free burst width (every miss gets a slot, so both paths
+    # personalize the same tenants); every 5th query is an out-of-universe
+    # tenant — no server-side data, both paths must serve the global head
+    pb = min(burst, cfg["n_slots"] - 8)
+    for bidx in range(3):
+        p_slots.absorb(chunks[bidx])
+        p_lru.absorb(chunks[bidx])
+        cids = np.array(trace[bidx * burst:bidx * burst + pb])
+        cids[::5] = cfg["n_tenants"] + bidx
+        s1, r1 = p_slots.query(cids, xs_bursts[bidx][:pb])
+        s2, r2 = p_lru.query(cids, xs_bursts[bidx][:pb])
+        modes_match = modes_match and r1["modes"] == r2["modes"]
+        parity_err = max(parity_err, float(jnp.max(jnp.abs(s1 - s2))))
+        g = [i for i, m in enumerate(r1["modes"]) if m == "global"]
+        if not g or not np.array_equal(np.asarray(s1)[g], np.asarray(s2)[g]):
+            global_bitwise = False
+    emit(
+        "serving_parity_strict", 0.0,
+        f"personalized_err={parity_err:.2e} global_bitwise={global_bitwise}",
+    )
+
+    # ---- admission control under overload ---------------------------------
+    over = ServingEngine(
+        ServingConfig(
+            n_classes=cfg["n_classes"], ridge_lambda=RIDGE_LAMBDA,
+            n_slots=cfg["n_slots"], queue_depth=64, max_batch=16,
+            deadline_ticks=2, serve_bucket=16,
+        ),
+        universe,
+    )
+    over.init(cfg["d"])
+    over.absorb(chunks[0])
+    offered = 4 * burst
+    over_trace = zipf_traffic(
+        cfg["n_tenants"], offered, exponent=ZIPF_EXPONENT, seed=11
+    )
+    over_xs = np.concatenate(xs_bursts, axis=0)[:offered]
+    admitted, shed_enq = over.enqueue(over_trace, over_xs)
+    served = 0
+    while over.queue:
+        _, rep = over.tick()
+        served += rep["queries"]
+    accounted = served + shed_enq + over.shed_deadline == offered
+    emit(
+        "serving_admission_control", 0.0,
+        f"offered={offered} admitted={admitted} served={served} "
+        f"shed_overflow={shed_enq} shed_deadline={over.shed_deadline} "
+        f"accounted={accounted}",
+    )
+
+    assert disp_per_batch == 1, (
+        f"serve stage must cost 1 dispatch per batch, got {disp_per_batch}"
+    )
+    assert serve_disp == serve_ticks, (
+        f"{serve_disp} serve dispatches over {serve_ticks} batches"
+    )
+    assert tenant_invariant, "serve dispatches must not scale with tenant count"
+    assert qps_speedup >= 2.0, (
+        f"slots must sustain >= 2x LRU QPS at skewed load, got {qps_speedup:.2f}x"
+    )
+    assert parity_err <= 1e-5, (
+        f"strict slots drifted from the synchronous server: {parity_err:.2e}"
+    )
+    assert global_bitwise, "global-mode answers must match bitwise"
+    assert modes_match, "strict slots must serve the same modes as the LRU path"
+    assert shed_enq > 0 and over.shed_deadline > 0, (
+        "overload phase must exercise both shedding paths"
+    )
+    assert accounted, "every offered query must be served or accounted shed"
+    return {
+        "slots_qps": results["slots"]["qps"],
+        "lru_qps": results["lru"]["qps"],
+        "qps_speedup": qps_speedup,
+        "slots_p50_s": results["slots"]["p50"],
+        "slots_p99_s": results["slots"]["p99"],
+        "lru_p50_s": results["lru"]["p50"],
+        "lru_p99_s": results["lru"]["p99"],
+        "serve_dispatches_per_batch": disp_per_batch,
+        "steady_serve_dispatches": serve_disp,
+        "steady_solve_dispatches": solve_disp,
+        "steady_batches": serve_ticks,
+        "dispatch_tenant_invariant": tenant_invariant,
+        "parity_err": parity_err,
+        "global_bitwise": global_bitwise,
+        "parity_modes_match": modes_match,
+        "hit_rate": slots.hits / max(slots.hits + slots.misses, 1),
+        "evictions": slots.table.evictions,
+        "slot_overflow": slots.slot_overflow,
+        "shed_overflow": shed_enq,
+        "shed_deadline": over.shed_deadline,
+        "overload_served": served,
+        "overload_accounted": accounted,
+        "queries": burst * n_bursts,
+        "n_tenants": cfg["n_tenants"],
+        "n_slots": cfg["n_slots"],
+        "zipf_exponent_x10": int(ZIPF_EXPONENT * 10),
+    }
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small config (CI budget)")
+    args = ap.parse_args()
+    out = main(smoke=args.smoke)
+    print(out)

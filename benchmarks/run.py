@@ -16,6 +16,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to paper artifacts:
   bench_rounds           (round engine)    packed FL round vs per-client loop
   bench_streaming        (streaming)       packed arrival scan vs Woodbury loop
   bench_personalize      (personalization) batched per-tenant heads vs re-solve loop
+  bench_serving          (slot serving)    continuous-batching slots vs synchronous LRU
   bench_scaleout         (dist layer)      weak scaling of the one-dispatch engines
   roofline               §Roofline         dry-run roofline table
 
@@ -42,6 +43,7 @@ MODULES = [
     "bench_rounds",
     "bench_streaming",
     "bench_personalize",
+    "bench_serving",
     "bench_scaleout",
     "bench_invariance",
     "bench_ncm",
@@ -59,6 +61,7 @@ JSON_OUT = {
     "bench_rounds": "rounds",
     "bench_streaming": "streaming",
     "bench_personalize": "personalize",
+    "bench_serving": "serving",
     "bench_scaleout": "scaleout",
 }
 

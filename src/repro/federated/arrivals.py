@@ -20,6 +20,13 @@ driver.  Three generators:
 :func:`pack_schedule` materializes a schedule against a
 :class:`repro.data.pipeline.FederatedDataset` into the engine's
 :class:`repro.data.pipeline.PackedArrivals`.
+
+The QUERY side of serving traffic lives here too: :func:`zipf_traffic`
+draws seeded, replayable tenant-attributed query traces under the
+bounded-Zipf popularity skew of the production cross-device regime — a
+tiny head of hot tenants dominating a long cold tail — which is what the
+slot-serving engine's cache/eviction policies are exercised against
+(``benchmarks/bench_serving.py``, ``repro.launch.serve_heads``).
 """
 from __future__ import annotations
 
@@ -121,6 +128,45 @@ def skewed_schedule(
     order = np.argsort(key, kind="stable")
     chunks = np.array_split(order, n_waves)
     return [[int(c) for c in chunk] for chunk in chunks]
+
+
+def zipf_traffic(
+    n_tenants: int,
+    n_queries: int,
+    *,
+    exponent: float = 1.1,
+    seed: int = 0,
+    permute: bool = True,
+) -> np.ndarray:
+    """Seeded, replayable Zipf-skewed query traffic: ``(n_queries,)`` tenant ids.
+
+    Tenant popularity follows a BOUNDED Zipf law over the ``n_tenants``
+    universe — rank r drawn with probability ∝ r^(-exponent) — sampled by
+    inverse-CDF so one call materializes the whole trace (no per-draw
+    rejection, exact at any universe size).  With ``permute`` the
+    popularity ranks are scattered over tenant ids by a seeded
+    permutation, so "hot" tenants are not simply the low ids; without it
+    tenant 0 is the hottest (convenient for assertions).  Same
+    ``(n_tenants, n_queries, exponent, seed)`` ⇒ the identical trace, so
+    benchmark runs replay byte-identical traffic.
+
+    ``exponent`` ≈ 1.0–1.3 matches production cross-device skew: at 1.1
+    over 1M tenants the top ~1% of tenants draw roughly half the queries.
+    """
+    if n_tenants < 1:
+        raise ValueError(f"n_tenants must be >= 1, got {n_tenants}")
+    if n_queries < 0:
+        raise ValueError(f"n_queries must be >= 0, got {n_queries}")
+    if exponent <= 0.0:
+        raise ValueError(f"exponent must be > 0, got {exponent}")
+    rng = np.random.default_rng(seed)
+    weights = np.arange(1, n_tenants + 1, dtype=np.float64) ** -exponent
+    cdf = np.cumsum(weights)
+    cdf /= cdf[-1]
+    ranks = np.searchsorted(cdf, rng.uniform(size=n_queries), side="right")
+    if permute:
+        ranks = rng.permutation(n_tenants)[ranks]
+    return ranks.astype(np.int64)
 
 
 def pack_schedule(

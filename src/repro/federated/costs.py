@@ -162,6 +162,76 @@ class CostModel:
         """
         return n_tenants * (self.d**2 + self.d * self.C) * FP32_BYTES
 
+    # --- continuous-batching slot serving (repro.launch.serving_engine) ----
+
+    def slot_table_bytes(self, n_slots: int) -> float:
+        """Device-resident slot-table memory at S slots (S·d·C fp32 heads).
+
+        The slot engine's whole device footprint: a FIXED donated buffer
+        sized by the hot working set, not the tenant universe — compare
+        against :meth:`head_cache_bytes` at the full tenant count to see
+        what the slots buy (a 1M-tenant head store vs a few thousand
+        resident slots serving the same Zipf traffic).
+        """
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        return n_slots * self.head * FP32_BYTES
+
+    def slot_solve_flops(
+        self, n_solved: float, avg_n_k: float, grid: int = 5
+    ) -> float:
+        """Solve-stage FLOPs for one tick batching ``n_solved`` cache misses.
+
+        Per head: one rank-n_k symmetric update of the tenant's Gram
+        contribution, then the α-grid sweep pays ``grid`` refactorizations
+        (d³/3) + two triangular solves (2·d²·C) each — all inside ONE
+        dispatch over the cohort, so this is the tick's arithmetic, not a
+        per-tenant loop count.
+        """
+        per_head = (
+            avg_n_k * 0.5 * self.d * (self.d + 1)
+            + grid * (self.d**3 / 3.0 + 2.0 * self.d**2 * self.C)
+        )
+        return n_solved * per_head
+
+    def serve_flops(self, n_queries: float) -> float:
+        """Serve-stage FLOPs for one tick answering q queries.
+
+        One gathered batched matvec: 2·d·C per query against its slot's
+        head.  Orders of magnitude below :meth:`slot_solve_flops`, which
+        is why the engine amortizes solves across ticks and serves hits
+        from resident slots.
+        """
+        return 2.0 * n_queries * self.d * self.C
+
+    def serving_qps_roofline(
+        self,
+        flops_per_s: float = 1.97e14,  # bf16 peak, TPU v5e chip
+        hbm_bw: float = 8.1e11,  # bytes/s HBM, TPU v5e chip
+    ) -> Dict[str, float]:
+        """Sustained-QPS ceiling of the serve stage on one chip.
+
+        Each query touches its gathered head (d·C), its feature row (d)
+        and its score row (C) — at d·C fp32 bytes per 2·d·C FLOPs the
+        arithmetic intensity is ~0.5 FLOP/byte, so the stage is
+        MEMORY-BOUND on any accelerator: the roofline is HBM bandwidth
+        over bytes-per-query, and batching queries per tick is how the
+        engine actually reaches it (dispatch overhead amortized to O(1)
+        per batch, not per query).
+        """
+        flops_q = self.serve_flops(1)
+        bytes_q = FP32_BYTES * (self.head + self.d + self.C)
+        compute_qps = flops_per_s / flops_q
+        memory_qps = hbm_bw / bytes_q
+        return {
+            "flops_per_query": flops_q,
+            "bytes_per_query": bytes_q,
+            "compute_bound_qps": compute_qps,
+            "memory_bound_qps": memory_qps,
+            "qps": min(compute_qps, memory_qps),
+            "bound": "memory" if memory_qps < compute_qps else "compute",
+        }
+
     # --- two-stage statistics all-reduce (repro.federated.dist) ------------
 
     @property

@@ -14,9 +14,19 @@ paid for:
   refresh cadence, and the reported STALENESS metric (waves / samples
   absorbed since the last re-solve) quantifies what queries see.
 
+``--engine slots`` routes the same loop through the continuous-batching
+slot engine (:mod:`repro.launch.serving_engine`): absorbs go through its
+absorb stage, query bursts are admitted to its queue and answered by the
+one-dispatch serve stage against the pinned global slot (refreshed at
+tick time whenever the stream advanced — the slot engine's solve stage
+owns the refresh, so the ``--policy`` staleness knobs report the stream
+state's lag while queries see a tick-fresh head).  ``--engine lru``
+(default) is the legacy synchronous driver.  Same log/report shape either
+way.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_stream --waves 24 --rate 4 \
-      --policy every-k --k 4 --segment 6
+      --policy every-k --k 4 --segment 6 --engine slots
 """
 from __future__ import annotations
 
@@ -24,6 +34,7 @@ import argparse
 import time
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import fed3r
 from repro.data.pipeline import make_federated_features
@@ -47,10 +58,18 @@ def serve_stream(
     d: int = 64,
     n_classes: int = 10,
     ridge_lambda: float = 1e-2,
+    engine: str = "lru",
     seed: int = 0,
     verbose: bool = True,
 ) -> dict:
-    """Run the arrival → absorb → query loop; returns the serving log."""
+    """Run the arrival → absorb → query loop; returns the serving log.
+
+    ``engine="lru"`` is the legacy synchronous driver; ``engine="slots"``
+    rides the continuous-batching slot engine (absorb/serve stages, one
+    dispatch each) behind the same log shape.
+    """
+    if engine not in ("lru", "slots"):
+        raise ValueError(f"unknown serving engine: {engine!r}")
     # noise calibrated so the served accuracy GROWS over the stream —
     # stale refreshes are then visible in the query-burst numbers
     fed, test = make_federated_features(
@@ -66,13 +85,32 @@ def serve_stream(
     packed = pack_schedule(fed, schedule)
 
     refresh_every = 1 if policy == "arrival" else k
-    engine = StreamingEngine(StreamConfig(
-        n_classes=n_classes, ridge_lambda=ridge_lambda,
-        refresh_every=refresh_every,
-    ))
-    state = engine.init(d)
     test_x = jnp.asarray(test.features)
     test_y = jnp.asarray(test.labels)
+    test_np = np.asarray(test.features)
+
+    slot_server = None
+    if engine == "slots":
+        from repro.launch.serving_engine import ServingConfig, ServingEngine
+
+        # global-only traffic: a tiny table (slot 0 + one spare) suffices,
+        # and every query carries tenant -1 (no server-side data)
+        slot_server = ServingEngine(
+            ServingConfig(
+                n_classes=n_classes, ridge_lambda=ridge_lambda, n_slots=2,
+                queue_depth=max(4096, len(test_np)),
+            ),
+            fed,
+        )
+        slot_server.init(d)
+        stream_engine = slot_server.stream
+        state = slot_server.state
+    else:
+        stream_engine = StreamingEngine(StreamConfig(
+            n_classes=n_classes, ridge_lambda=ridge_lambda,
+            refresh_every=refresh_every,
+        ))
+        state = stream_engine.init(d)
 
     log: dict = {
         "wave": [], "clients_seen": [], "samples_seen": [],
@@ -80,11 +118,12 @@ def serve_stream(
         # this driver serves ONE global head to all tenants; per-tenant
         # heads (with their own cache staleness) are repro.launch.serve_heads
         "served_head": "global",
+        "engine": engine,
     }
     seen = 0
     t0 = time.time()
     if verbose:
-        print(f"policy={policy} refresh_every={refresh_every} "
+        print(f"engine={engine} policy={policy} refresh_every={refresh_every} "
               f"waves={packed.n_waves} clients={packed.n_clients}")
         print("served head: GLOBAL (one W for all tenants; staleness below "
               "is refresh-policy lag — for per-tenant heads and their cache "
@@ -92,10 +131,24 @@ def serve_stream(
         print("wave | arrived | samples seen | stale (waves/samples) | acc(served W)")
     for lo in range(0, packed.n_waves, segment):
         chunk = packed.slice_waves(lo, min(lo + segment, packed.n_waves))
-        state, trace = engine.absorb(state, chunk)  # ONE dispatch per segment
+        if engine == "slots":
+            slot_server.absorb(chunk)  # ONE dispatch per segment
+            state = slot_server.state
+            # the query burst: every test row admitted with tenant -1 →
+            # served by the pinned global slot in ONE serve dispatch
+            scores, _ = slot_server.query(
+                np.full((len(test_np),), -1, np.int64), test_np
+            )
+            acc = float(jnp.mean(
+                (jnp.argmax(scores, axis=-1) == test_y).astype(jnp.float32)
+            ))
+        else:
+            state, trace = stream_engine.absorb(state, chunk)
+            # a query burst against the served (possibly stale) classifier
+            acc = float(fed3r.accuracy(
+                stream_engine.classifier(state), test_x, test_y
+            ))
         seen += chunk.n_clients
-        # a query burst against the served (possibly stale) classifier
-        acc = float(fed3r.accuracy(engine.classifier(state), test_x, test_y))
         log["wave"].append(int(state.wave))
         log["clients_seen"].append(seen)
         log["samples_seen"].append(float(state.n))
@@ -106,14 +159,26 @@ def serve_stream(
             print(f"{int(state.wave):4d} | {chunk.n_clients:7d} | "
                   f"{float(state.n):12.0f} | {int(state.stale_waves):5d} /"
                   f"{float(state.stale_samples):8.0f} | {acc:.4f}")
-    state = engine.refresh(state)  # final sync before reporting
-    acc = float(fed3r.accuracy(engine.classifier(state), test_x, test_y))
+    if engine == "slots":
+        state = slot_server.state
+        acc = log["acc_served"][-1]  # slot ticks already serve a fresh head
+        log["dispatches"] = (
+            slot_server.absorb_dispatches + slot_server.solve_dispatches
+            + slot_server.serve_dispatches
+        )
+        log["serve_dispatches"] = slot_server.serve_dispatches
+        log["stage_s"] = dict(slot_server.stage_s)
+    else:
+        state = stream_engine.refresh(state)  # final sync before reporting
+        acc = float(fed3r.accuracy(
+            stream_engine.classifier(state), test_x, test_y
+        ))
+        log["dispatches"] = stream_engine.dispatches
     log["acc_final"] = acc
-    log["dispatches"] = engine.dispatches
     log["wall_s"] = time.time() - t0
     if verbose:
         print(f"final sync: acc={acc:.4f}  "
-              f"({engine.dispatches} dispatches for {packed.n_waves} waves, "
+              f"({log['dispatches']} dispatches for {packed.n_waves} waves, "
               f"{log['wall_s']:.2f}s)")
     return log
 
@@ -132,13 +197,15 @@ def main() -> None:
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--classes", type=int, default=10)
     ap.add_argument("--ridge-lambda", type=float, default=1e-2)
+    ap.add_argument("--engine", choices=("lru", "slots"), default="lru",
+                    help="legacy synchronous driver vs slot-serving engine")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve_stream(
         n_waves=args.waves, rate=args.rate, policy=args.policy, k=args.k,
         segment=args.segment, skew=args.skew, n_clients=args.clients,
         d=args.d, n_classes=args.classes, ridge_lambda=args.ridge_lambda,
-        seed=args.seed,
+        engine=args.engine, seed=args.seed,
     )
 
 
