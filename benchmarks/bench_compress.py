@@ -1,0 +1,228 @@
+"""Accuracy-vs-bytes of the compressed statistics uplink.
+
+The claim under test (ISSUE 7 acceptance): with
+``EngineConfig(wire=WireFormat(...))`` every (A_k, b_k) upload crosses the
+wire as int8/fp8 per-tile absmax tiles or a rank-r sketch instead of dense
+fp32 — ≥ 3.9× fewer uplink bytes under int8 — while the engines keep their
+one-dispatch contract and the served classifier's synthetic-eval accuracy
+stays within 0.5% of the fp32 engine; the ``fp32`` format itself stays
+BITWISE identical to the uncompressed engines.  Error feedback
+(:class:`repro.federated.compress.UplinkCompressor`) must strictly beat
+the no-feedback uplink over repeated rounds (telescoping vs linear error
+growth).
+
+Usage: PYTHONPATH=src:. python benchmarks/bench_compress.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import fed3r
+from repro.core.fed3r import Fed3RStats
+from repro.data.pipeline import pack_arrival_waves, pack_client_shards
+from repro.federated.compress import UplinkCompressor, WireFormat
+from repro.federated.costs import stats_wire_bytes
+from repro.federated.engine import AccumulationEngine, EngineConfig
+from repro.federated.streaming_engine import StreamConfig, StreamingEngine
+
+D_FEAT = 64
+N_CLASSES = 50
+RIDGE_LAMBDA = 0.1
+TILE = 32  # absmax granularity at bench scale (d=64 → 2×2 scale grid)
+RANK = 48  # sketch rank at bench scale
+PAPER_D, PAPER_C = 1280, 2028  # MobileNetV2 features × Landmarks classes
+
+FORMATS = {
+    "fp32": WireFormat(),
+    "int8": WireFormat(kind="int8", tile=TILE),
+    "fp8": WireFormat(kind="fp8", tile=TILE),
+    "sketch": WireFormat(kind="sketch", rank=RANK),
+}
+
+
+def _make_federation(K, lo, hi, seed=0):
+    """Clustered (separable, noisy) clients + a held-out eval set."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(N_CLASSES, D_FEAT)).astype(np.float32) * 2.0
+
+    def draw(n):
+        y = rng.integers(0, N_CLASSES, size=n).astype(np.int32)
+        # noise calibrated so accuracy lands mid-range — saturated evals
+        # would make the compressed-vs-fp32 accuracy gate vacuous
+        x = centers[y] + 7.0 * rng.normal(size=(n, D_FEAT)).astype(np.float32)
+        return x, y
+
+    clients = {k: draw(int(rng.integers(lo, hi))) for k in range(K)}
+    eval_x, eval_y = draw(4000)
+    return clients, jnp.asarray(eval_x), eval_y
+
+
+def _accuracy(W, eval_x, eval_y) -> float:
+    pred = np.argmax(np.asarray(fed3r.predict(W, eval_x)), axis=1)
+    return float(np.mean(pred == eval_y))
+
+
+def _client_stats(x, y):
+    z, yh, n = fed3r.masked_design(
+        jnp.asarray(x), jnp.asarray(y), N_CLASSES, None
+    )
+    return Fed3RStats(A=z.T @ z, b=z.T @ yh, n=n)
+
+
+def main(smoke: bool = False) -> dict:
+    K = 24 if smoke else 60
+    ef_rounds = 6 if smoke else 12
+    clients, eval_x, eval_y = _make_federation(K, lo=40, hi=120)
+    packed = pack_client_shards(clients, clients_per_shard=6)
+
+    # ---- wire-bytes table (exact analytic pricing, both scales) -----------
+    ratios = {}
+    for d, C, scale in ((D_FEAT, N_CLASSES, "bench"), (PAPER_D, PAPER_C, "paper")):
+        fp32_bytes = stats_wire_bytes(d, C, "fp32")
+        for name, fmt in FORMATS.items():
+            by = stats_wire_bytes(d, C, fmt.kind, fmt.tile, fmt.rank)
+            ratios[f"{scale}_{name}"] = fp32_bytes / by
+            emit(
+                f"compress_bytes_{scale}_{name}", 0.0,
+                f"d={d} C={C} bytes={by:.3e} ratio_vs_fp32={fp32_bytes / by:.2f}x",
+            )
+
+    # ---- engine accuracy per format (one dispatch each) -------------------
+    accs, a_errs, dispatches = {}, {}, {}
+    acc_fp32_stats = None
+    for name, fmt in FORMATS.items():
+        eng = AccumulationEngine(
+            EngineConfig(n_classes=N_CLASSES, use_kernel=False, wire=fmt)
+        )
+        acc = eng.accumulate(eng.init(D_FEAT), packed)
+        jax.block_until_ready(acc.stats.A)
+        dispatches[name] = eng.dispatches
+        if name == "fp32":
+            acc_fp32_stats = acc.stats
+        W = fed3r.solve(acc.stats, RIDGE_LAMBDA)
+        accs[name] = _accuracy(W, eval_x, eval_y)
+        a_errs[name] = float(
+            jnp.max(jnp.abs(acc.stats.A - acc_fp32_stats.A))
+            / jnp.max(jnp.abs(acc_fp32_stats.A))
+        )
+        emit(
+            f"compress_engine_{name}", 0.0,
+            f"K={K} acc={accs[name]:.4f} A_rel_err={a_errs[name]:.3e} "
+            f"dispatches={dispatches[name]} ratio={ratios[f'bench_{name}']:.2f}x",
+        )
+
+    # fp32 wire format must be BITWISE the uncompressed engine
+    plain = AccumulationEngine(EngineConfig(n_classes=N_CLASSES, use_kernel=False))
+    plain_acc = plain.accumulate(plain.init(D_FEAT), packed)
+    fp32_bitwise = bool(
+        jnp.array_equal(acc_fp32_stats.A, plain_acc.stats.A)
+        and jnp.array_equal(acc_fp32_stats.b, plain_acc.stats.b)
+    )
+
+    # ---- error feedback vs no feedback over repeated rounds ---------------
+    def ef_run(error_feedback):
+        up = UplinkCompressor(
+            WireFormat(kind="int8", tile=TILE, error_feedback=error_feedback),
+            use_kernel=False,
+        )
+        tot = fed3r.init_stats(D_FEAT, N_CLASSES)
+        exact = fed3r.init_stats(D_FEAT, N_CLASSES)
+        for _ in range(ef_rounds):
+            for k, (x, y) in clients.items():
+                s = _client_stats(x, y)
+                tot = fed3r.merge(tot, up.upload(k, s))
+                exact = fed3r.merge(exact, s)
+        err = float(
+            jnp.max(jnp.abs(tot.A - exact.A)) / jnp.max(jnp.abs(exact.A))
+        )
+        return err, _accuracy(fed3r.solve(tot, RIDGE_LAMBDA), eval_x, eval_y), up
+
+    ef_err, ef_acc, up = ef_run(True)
+    noef_err, noef_acc, _ = ef_run(False)
+    emit(
+        "compress_error_feedback", 0.0,
+        f"rounds={ef_rounds} ef_A_rel_err={ef_err:.3e} "
+        f"noef_A_rel_err={noef_err:.3e} ef_acc={ef_acc:.4f} "
+        f"noef_acc={noef_acc:.4f} wire_ratio={up.compression_ratio:.2f}x",
+    )
+
+    # ---- streaming engine under the int8 wire -----------------------------
+    items = sorted(clients.items())
+    waves = [
+        [clients[k] for k, _ in items[t::8]] for t in range(8)
+    ]
+    packed_w = pack_arrival_waves([w for w in waves if w])
+
+    def stream(fmt):
+        eng = StreamingEngine(StreamConfig(
+            n_classes=N_CLASSES, ridge_lambda=RIDGE_LAMBDA,
+            use_kernel=False, wire=fmt,
+        ))
+        state, _ = eng.absorb(eng.init(D_FEAT), packed_w)
+        jax.block_until_ready(state.W)
+        return eng, state
+
+    s_eng32, s32 = stream(WireFormat())
+    s_eng8, s8 = stream(WireFormat(kind="int8", tile=TILE))
+    stream_acc32 = _accuracy(s32.W, eval_x, eval_y)
+    stream_acc8 = _accuracy(s8.W, eval_x, eval_y)
+    stream_finite = bool(jnp.all(jnp.isfinite(s8.L)) and jnp.all(jnp.isfinite(s8.W)))
+    emit(
+        "compress_streaming_int8", 0.0,
+        f"waves={packed_w.n_waves} acc_fp32={stream_acc32:.4f} "
+        f"acc_int8={stream_acc8:.4f} finite={stream_finite} "
+        f"dispatches={s_eng8.dispatches}",
+    )
+
+    # ---- acceptance gates -------------------------------------------------
+    int8_ratio_ok = ratios["bench_int8"] >= 3.9 and ratios["paper_int8"] >= 3.9
+    acc_gap = abs(accs["int8"] - accs["fp32"])
+    acc_ok = acc_gap <= 0.005
+    one_dispatch = all(v == 1 for v in dispatches.values())
+    ef_beats_noef = ef_err < noef_err
+
+    assert int8_ratio_ok, f"int8 wire ratio < 3.9x: {ratios}"
+    assert acc_ok, f"int8 accuracy gap {acc_gap:.4f} > 0.005"
+    assert fp32_bitwise, "fp32 wire format must be bitwise identical"
+    assert one_dispatch, f"dispatch contract broken: {dispatches}"
+    assert ef_beats_noef, f"EF ({ef_err}) must beat no-EF ({noef_err})"
+    assert stream_finite, "compressed streaming produced non-finite state"
+
+    return {
+        "n_clients": K,
+        "ef_rounds": ef_rounds,
+        "ratio_bench_int8": ratios["bench_int8"],
+        "ratio_paper_int8": ratios["paper_int8"],
+        "ratio_paper_sketch": ratios["paper_sketch"],
+        "int8_ratio_ge_3p9": int8_ratio_ok,
+        "acc_fp32": accs["fp32"],
+        "acc_int8": accs["int8"],
+        "acc_fp8": accs["fp8"],
+        "acc_sketch": accs["sketch"],
+        "acc_within_half_pct": acc_ok,
+        "fp32_bitwise": fp32_bitwise,
+        "fp32_dispatches": dispatches["fp32"],
+        "int8_dispatches": dispatches["int8"],
+        "fp8_dispatches": dispatches["fp8"],
+        "sketch_dispatches": dispatches["sketch"],
+        "streaming_int8_dispatches": s_eng8.dispatches,
+        "int8_A_rel_err": a_errs["int8"],
+        "sketch_A_rel_err": a_errs["sketch"],
+        "ef_A_rel_err": ef_err,
+        "noef_A_rel_err": noef_err,
+        "ef_beats_noef": ef_beats_noef,
+        "streaming_finite": stream_finite,
+    }
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small configs (CI budget)")
+    args = ap.parse_args()
+    out = main(smoke=args.smoke)
+    print(out)

@@ -98,6 +98,24 @@ def main() -> list:
                 f"ici_us={ar['ici_s'] * 1e6:.1f} dcn_us={ar['dcn_s'] * 1e6:.1f} "
                 f"flat_us={ar['flat_allreduce_s'] * 1e6:.1f}",
             )
+
+        # compressed statistics wire formats (repro.federated.compress):
+        # per-upload bytes at paper scale, the retained-stats figure per 1M
+        # tenants, and the two-stage all-reduce re-priced under int8 tiles
+        for kind in ("fp32", "int8", "fp8", "sketch"):
+            emit(
+                f"compress_{ds_name}_wire_{kind}", 0.0,
+                f"upload_mb={cm.compressed_stats_bytes(kind) / 1e6:.2f} "
+                f"ratio_vs_fp32={cm.wire_compression_ratio(kind):.2f}x "
+                f"tenant_stats_gb_per_1M="
+                f"{cm.compressed_stats_bytes(kind, M_TENANTS) / 1e9:.2f}",
+            )
+        ar8 = cm.two_stage_allreduce(16, 2, wire="int8")
+        emit(
+            f"compress_{ds_name}_allreduce_int8_multipod", ar8["total_s"] * 1e6,
+            f"payload_mb={ar8['payload_bytes'] / 1e6:.1f} "
+            f"ici_us={ar8['ici_s'] * 1e6:.1f} dcn_us={ar8['dcn_s'] * 1e6:.1f}",
+        )
     return rows
 
 

@@ -18,6 +18,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to paper artifacts:
   bench_personalize      (personalization) batched per-tenant heads vs re-solve loop
   bench_serving          (slot serving)    continuous-batching slots vs synchronous LRU
   bench_scaleout         (dist layer)      weak scaling of the one-dispatch engines
+  bench_compress         (wire formats)    accuracy-vs-bytes of compressed uploads
   roofline               §Roofline         dry-run roofline table
 
 Modules listed in ``JSON_OUT`` additionally persist their result dict as a
@@ -45,6 +46,7 @@ MODULES = [
     "bench_personalize",
     "bench_serving",
     "bench_scaleout",
+    "bench_compress",
     "bench_invariance",
     "bench_ncm",
     "bench_rf",
@@ -63,6 +65,7 @@ JSON_OUT = {
     "bench_personalize": "personalize",
     "bench_serving": "serving",
     "bench_scaleout": "scaleout",
+    "bench_compress": "compress",
 }
 
 

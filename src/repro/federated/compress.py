@@ -1,0 +1,448 @@
+"""Compressed statistics uplink — quantized / sketched (A_k, b_k) wire formats.
+
+Fed3R's wire cost is dominated by the d×d second moment every client
+uploads (``costs.CostModel.tenant_stats_bytes``: ~17 TB per 1M tenants at
+d = 1280).  This module makes that uplink LOSSY-TOLERANT: every (A_k, b_k)
+statistics payload can travel as
+
+* ``int8``  — per-tile absmax symmetric int8 (1 B/element + one fp32 scale
+  per (tile × tile) block; ~4× fewer bytes), packed/unpacked by the fused
+  Pallas kernels :func:`repro.kernels.quantize_tiles` /
+  :func:`repro.kernels.dequant_accumulate` on TPU and their jnp oracles
+  elsewhere;
+* ``fp8``   — the same tiling algebra with a ``float8_e4m3fn`` payload
+  (identical byte count to int8, coarser mantissa, wider per-tile dynamic
+  range); falls back to int8 with a warning when the backend lacks fp8
+  support (:func:`fp8_supported`), so CPU CI never hard-fails on dtype
+  support;
+* ``sketch`` — a rank-r factor Z_k (r × d) with A_k ≈ Z_kᵀZ_k (top-r
+  eigenpairs — the optimal Frobenius rank-r approximation of the PSD
+  second moment); the aggregator absorbs it through the same additive
+  rank-n Gram algebra the streaming engine's Cholesky update uses, and b_k
+  stays dense fp32.  Wins over int8 when r ≪ d/4 and C ≪ d.
+
+``fp32`` is the identity format: its code path adds the raw arrays exactly
+as the uncompressed engines did, so it stays BITWISE identical to them.
+
+Error feedback: a lossy uplink hit repeatedly by the same client would
+accumulate bias (deterministic rounding repeats the SAME error every
+round, so it grows linearly).  The standard fix is a per-client residual
+e_k carried between uploads: send Q(x + e_k), keep e_k ← (x + e_k) −
+Q(x + e_k).  The aggregated sum over R uploads then telescopes to
+Σ x_t − e_R — off by ONE quantization step regardless of R, instead of R
+steps.  :func:`compress_stats_ef` is the jit-able algebra;
+:class:`UplinkCompressor` is the host-side per-client residual store (the
+deployment shape: one residual pytree per client, living where the client
+lives) with wire-byte accounting priced by
+:func:`repro.federated.costs.stats_wire_bytes`.
+
+Engine integration (one dispatch preserved everywhere):
+
+* :class:`repro.federated.engine.AccumulationEngine` folds each client's
+  quantized payload into the fp32 accumulator INSIDE its scan via the
+  fused dequantize-accumulate (``EngineConfig(wire=...)``);
+* :class:`repro.federated.streaming_engine.StreamingEngine` compresses
+  each wave's rank-n statistics before they touch the carried factor
+  (``StreamConfig(wire=...)``);
+* the dist layer's psum backends roundtrip each device's LOCAL partial
+  through the wire before the all-reduce
+  (``DistContext.all_reduce(..., wire_fn=...)``), so the ICI/DCN payload
+  of every merge is the compressed statistics, dequantized once at the
+  aggregation boundary.
+
+Secure-aggregation interop (paper App. B): masked summation needs EXACT
+arithmetic, which float payloads cannot give but integer payloads can —
+:func:`cohort_quantize_int8` quantizes a whole cohort against SHARED
+per-tile scales into int32 working precision, so pairwise masks added mod
+2³² cancel exactly in the sum (:func:`repro.federated.secure_agg.
+mask_quantized_payload`), and one shared-scale dequantization recovers
+the cohort aggregate.
+"""
+from __future__ import annotations
+
+import functools
+import warnings
+from dataclasses import dataclass, replace
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fed3r import Fed3RStats
+from repro.federated.costs import WIRE_KINDS, stats_wire_bytes
+from repro.federated.dist import resolve_use_kernel
+from repro.kernels import dequant_accumulate, quantize_tiles
+from repro.kernels.quant import INT8_QMAX
+from repro.kernels.ref import dequant_acc_ref, quantize_tiles_ref
+
+FP8_QMAX = 448.0  # float8_e4m3fn max finite value
+
+
+@functools.lru_cache(maxsize=1)
+def fp8_supported() -> bool:
+    """Can the current backend round-trip ``float8_e4m3fn``?"""
+    if not hasattr(jnp, "float8_e4m3fn"):
+        return False
+    try:
+        x = jnp.asarray([1.0, -2.5], jnp.float32)
+        back = x.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+        jax.block_until_ready(back)
+        return True
+    except Exception:  # noqa: BLE001 — any dtype/lowering failure means "no"
+        return False
+
+
+@dataclass(frozen=True)
+class WireFormat:
+    """Static wire-format configuration of the statistics uplink.
+
+    ``kind`` ∈ {"fp32", "int8", "fp8", "sketch"}; ``tile`` is the absmax
+    granularity of the quantized kinds (one fp32 scale per tile × tile
+    block); ``rank`` is the sketch rank r; ``error_feedback`` enables the
+    per-client residual carry in :class:`UplinkCompressor` (the in-engine
+    folds are single-shot per client and stateless by construction).
+    Frozen + hashable, so it is a trace-time constant of the engines.
+    """
+
+    kind: str = "fp32"
+    tile: int = 128
+    rank: int = 16
+    error_feedback: bool = True
+
+    def __post_init__(self):
+        if self.kind not in WIRE_KINDS:
+            raise ValueError(
+                f"unknown wire kind: {self.kind!r} (expected one of {WIRE_KINDS})"
+            )
+        if self.tile < 1:
+            raise ValueError(f"tile must be >= 1, got {self.tile}")
+        if self.rank < 1:
+            raise ValueError(f"rank must be >= 1, got {self.rank}")
+
+    def resolved(self) -> "WireFormat":
+        """The format actually used on this backend: fp8 degrades to int8
+        (same byte count, finer mantissa) with a warning when the backend
+        cannot represent ``float8_e4m3fn`` — tier-1 CPU CI never hard-fails
+        on dtype support."""
+        if self.kind == "fp8" and not fp8_supported():
+            warnings.warn(
+                "fp8 wire format is unsupported on backend "
+                f"{jax.default_backend()!r}; falling back to int8 (identical "
+                "wire bytes, round-to-nearest int mantissa)",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return replace(self, kind="int8")
+        return self
+
+    def wire_bytes(self, d: int, C: int) -> float:
+        """Bytes one (A_k, b_k) upload costs under this format."""
+        return stats_wire_bytes(d, C, self.kind, self.tile, self.rank)
+
+
+# ---------------------------------------------------------------------------
+# Pure quantization algebra (jit-able; fmt is a static trace-time constant)
+# ---------------------------------------------------------------------------
+
+
+def _quantize_int8(
+    x: jax.Array, tile: int, use_kernel: Optional[bool]
+) -> Tuple[jax.Array, jax.Array]:
+    if resolve_use_kernel(use_kernel):
+        return quantize_tiles(x, tile=tile)
+    return quantize_tiles_ref(x, tile=tile)
+
+
+def _dequant_add_int8(
+    acc: jax.Array,
+    q: jax.Array,
+    scales: jax.Array,
+    tile: int,
+    use_kernel: Optional[bool],
+) -> jax.Array:
+    if resolve_use_kernel(use_kernel):
+        return dequant_accumulate(acc, q, scales, tile=tile)
+    return dequant_acc_ref(acc, q, scales, tile=tile)
+
+
+def _fp8_roundtrip(x: jax.Array, tile: int) -> jax.Array:
+    """Per-tile scaled fp8 quantize→dequantize (pure jnp; the payload byte
+    count matches int8, so the Pallas tiling story is shared with it)."""
+    M, N = x.shape
+    xf = x.astype(jnp.float32)
+    p0, p1 = (-M) % tile, (-N) % tile
+    xp = jnp.pad(xf, ((0, p0), (0, p1))) if (p0 or p1) else xf
+    Mt, Nt = xp.shape[0] // tile, xp.shape[1] // tile
+    blocks = xp.reshape(Mt, tile, Nt, tile)
+    absmax = jnp.max(jnp.abs(blocks), axis=(1, 3))
+    scales = jnp.where(absmax > 0.0, absmax / FP8_QMAX, 1.0)[:, None, :, None]
+    q = (blocks / scales).astype(jnp.float8_e4m3fn)
+    back = q.astype(jnp.float32) * scales
+    return back.reshape(xp.shape)[:M, :N]
+
+
+def sketch_psd(A: jax.Array, rank: int) -> jax.Array:
+    """Rank-r factor Z (r, d) of a PSD matrix with A ≈ ZᵀZ.
+
+    Top-r eigenpairs of the symmetric A (the optimal Frobenius rank-r
+    approximation); negative eigenvalues — fp noise around zero for a true
+    second moment — clamp to 0 so ZᵀZ stays PSD.
+    """
+    w, V = jnp.linalg.eigh(A.astype(jnp.float32))  # ascending eigenvalues
+    w_top = jnp.maximum(w[-rank:], 0.0)  # (r,)
+    return (V[:, -rank:] * jnp.sqrt(w_top)[None, :]).T  # (r, d)
+
+
+def unsketch(Z: jax.Array) -> jax.Array:
+    """The aggregator's view of a sketched upload: A ≈ ZᵀZ — the same
+    additive rank-n Gram form the Cholesky update kernel absorbs."""
+    return Z.T @ Z
+
+
+def wire_roundtrip(
+    A: jax.Array,
+    b: jax.Array,
+    fmt: WireFormat,
+    use_kernel: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Simulate the lossy uplink: the (Â, b̂) the aggregator receives.
+
+    ``fp32`` returns the inputs UNTOUCHED (bitwise identity — not a
+    recompute whose roundings could differ).  Under ``sketch`` only A is
+    sketched; b stays dense fp32.
+    """
+    if fmt.kind == "fp32":
+        return A, b
+    if fmt.kind == "sketch":
+        return unsketch(sketch_psd(A, fmt.rank)), b
+    if fmt.kind == "fp8":
+        return _fp8_roundtrip(A, fmt.tile), _fp8_roundtrip(b, fmt.tile)
+    qA, sA = _quantize_int8(A, fmt.tile, use_kernel)
+    qb, sb = _quantize_int8(b, fmt.tile, use_kernel)
+    zA = jnp.zeros_like(A, jnp.float32)
+    zb = jnp.zeros_like(b, jnp.float32)
+    return (
+        _dequant_add_int8(zA, qA, sA, fmt.tile, use_kernel),
+        _dequant_add_int8(zb, qb, sb, fmt.tile, use_kernel),
+    )
+
+
+def roundtrip_add(
+    accA: jax.Array,
+    accb: jax.Array,
+    A: jax.Array,
+    b: jax.Array,
+    fmt: WireFormat,
+    use_kernel: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fold one compressed (A_k, b_k) upload into the fp32 accumulator.
+
+    The aggregator-side merge primitive of the engines: under ``int8`` the
+    payload lands through the FUSED dequantize-accumulate kernel — the
+    dense dequantized intermediate never exists; under ``fp32`` this is
+    exactly the uncompressed ``acc + A`` (bitwise identical to the
+    pre-compression engines).
+    """
+    if fmt.kind == "fp32":
+        return accA + A, accb + b
+    if fmt.kind == "int8":
+        qA, sA = _quantize_int8(A, fmt.tile, use_kernel)
+        qb, sb = _quantize_int8(b, fmt.tile, use_kernel)
+        return (
+            _dequant_add_int8(accA, qA, sA, fmt.tile, use_kernel),
+            _dequant_add_int8(accb, qb, sb, fmt.tile, use_kernel),
+        )
+    Ah, bh = wire_roundtrip(A, b, fmt, use_kernel)
+    return accA + Ah, accb + bh
+
+
+def quant_spectral_bound(S: jax.Array, fmt: WireFormat) -> jax.Array:
+    """Data-dependent bound on ‖E‖₂ of the quantization error E = Ŝ − S.
+
+    Per-tile absmax quantization errs at most ``max_scale/2`` per entry
+    (int8) or ``|S_ij|·2⁻⁴`` (fp8's 3-bit mantissa); the spectral norm of a
+    dense d×d perturbation with entries bounded by δ concentrates near
+    √d·δ.  Used to size the jitter of :func:`psd_cholesky` — ``sketch``
+    and ``fp32`` introduce no indefiniteness (eigenvalue truncation keeps
+    ZᵀZ PSD; fp32 is exact) and return 0.
+    """
+    if fmt.kind in ("fp32", "sketch"):
+        return jnp.zeros((), jnp.float32)
+    d = S.shape[0]
+    per_entry = (
+        jnp.max(jnp.abs(S)) / 16.0
+        if fmt.kind == "fp8"
+        else 0.5 * jnp.max(jnp.abs(S)) / INT8_QMAX
+    )
+    return jnp.sqrt(jnp.float32(d)) * per_entry
+
+
+def psd_cholesky(G: jax.Array, bound: jax.Array) -> jax.Array:
+    """Cholesky of a nominally-PSD matrix whose smallest eigenvalues may
+    have been pushed negative by quantization noise.
+
+    Tries the plain factorization first (the common case: a well-filled
+    update keeps G positive definite and the answer is bit-identical to
+    ``jnp.linalg.cholesky``); on NaN, retries with escalating diagonal
+    jitter τ ∈ {1, 4, 16}·bound — a data-dependent ridge no larger than a
+    few quantization steps, applied ONLY when the factorization actually
+    failed.  Branch-free (``where`` chains), so it stays one fused program
+    inside the engines' scans.
+    """
+    L = jnp.linalg.cholesky(G)
+    eye = jnp.eye(G.shape[0], dtype=G.dtype)
+    for mult in (1.0, 4.0, 16.0):
+        retry = jnp.linalg.cholesky(G + (mult * bound) * eye)
+        L = jnp.where(jnp.any(jnp.isnan(L)), retry, L)
+    return L
+
+
+# ---------------------------------------------------------------------------
+# Error feedback — per-client residual carry across repeated participation
+# ---------------------------------------------------------------------------
+
+
+class EFState(NamedTuple):
+    """Per-client error-feedback residuals (what the wire has not yet sent)."""
+
+    eA: jax.Array  # (d, d) fp32
+    eb: jax.Array  # (d, C) fp32
+
+
+def ef_init(d: int, n_classes: int) -> EFState:
+    return EFState(
+        eA=jnp.zeros((d, d), jnp.float32),
+        eb=jnp.zeros((d, n_classes), jnp.float32),
+    )
+
+
+def compress_stats_ef(
+    A: jax.Array,
+    b: jax.Array,
+    ef: EFState,
+    fmt: WireFormat,
+    use_kernel: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, EFState]:
+    """One error-compensated upload: send Q(x + e), carry e ← (x+e) − Q(x+e).
+
+    Returns the aggregator's view (Â, b̂) and the new residual.  Under
+    ``fp32`` the upload is exact and the residual stays zero (bitwise
+    passthrough of A and b).
+    """
+    if fmt.kind == "fp32":
+        return A, b, ef
+    Ah, bh = wire_roundtrip(A + ef.eA, b + ef.eb, fmt, use_kernel)
+    return Ah, bh, EFState(eA=A + ef.eA - Ah, eb=b + ef.eb - bh)
+
+
+class UplinkCompressor:
+    """Host-side per-client compressed uplink with error-feedback residuals.
+
+    The deployment shape of the compression layer: each client owns one
+    residual pytree that persists across its repeated participations, so
+    the server-side accumulated A stays accurate no matter how many lossy
+    uploads a client makes (the errors telescope instead of accumulating).
+    ``upload`` is ONE jitted dispatch per call; ``bytes_sent`` /
+    ``bytes_fp32`` price the wire under the configured format vs today's
+    dense fp32 uplink.
+    """
+
+    def __init__(self, fmt: WireFormat, use_kernel: Optional[bool] = None):
+        self.fmt = fmt.resolved()
+        self.use_kernel = use_kernel
+        self._residuals: Dict[int, EFState] = {}
+        self.uploads = 0
+        self.bytes_sent = 0.0
+        self.bytes_fp32 = 0.0
+        self._fn = jax.jit(
+            lambda A, b, eA, eb: compress_stats_ef(
+                A, b, EFState(eA=eA, eb=eb), self.fmt, self.use_kernel
+            )
+        )
+
+    def upload(self, client_id: int, stats: Fed3RStats) -> Fed3RStats:
+        """Compress one client upload; returns the stats AS RECEIVED by the
+        aggregator (dequantized), advancing the client's residual."""
+        d, C = stats.b.shape
+        ef = self._residuals.get(client_id)
+        if ef is None or not self.fmt.error_feedback:
+            ef = ef_init(d, C)
+        Ah, bh, new_ef = self._fn(stats.A, stats.b, ef.eA, ef.eb)
+        if self.fmt.error_feedback:
+            self._residuals[client_id] = new_ef
+        self.uploads += 1
+        self.bytes_sent += self.fmt.wire_bytes(d, C)
+        self.bytes_fp32 += stats_wire_bytes(d, C, "fp32")
+        return Fed3RStats(A=Ah, b=bh, n=stats.n)
+
+    @property
+    def compression_ratio(self) -> float:
+        """fp32 bytes over bytes actually sent (1.0 before any upload)."""
+        return self.bytes_fp32 / self.bytes_sent if self.bytes_sent else 1.0
+
+
+# ---------------------------------------------------------------------------
+# Secure-aggregation interop — shared-scale integer payloads
+# ---------------------------------------------------------------------------
+
+
+class IntPayload(NamedTuple):
+    """One client's shared-scale integer upload (int32 working precision so
+    cohort sums and mod-2³² masks never saturate the int8 value range)."""
+
+    qA: jax.Array  # (d, d) int32 — int8-valued entries
+    qb: jax.Array  # (d, C) int32
+
+
+def _shared_scales(xs: Sequence[jax.Array], tile: int, qmax: float) -> jax.Array:
+    """Per-tile scales from the COHORT absmax (in deployment: a public
+    per-tile bound agreed before upload, so no raw data leaks)."""
+    M, N = xs[0].shape
+    p0, p1 = (-M) % tile, (-N) % tile
+    absmax = None
+    for x in xs:
+        xp = jnp.pad(x.astype(jnp.float32), ((0, p0), (0, p1))) if (p0 or p1) else x
+        blocks = xp.astype(jnp.float32).reshape(
+            xp.shape[0] // tile, tile, xp.shape[1] // tile, tile
+        )
+        am = jnp.max(jnp.abs(blocks), axis=(1, 3))
+        absmax = am if absmax is None else jnp.maximum(absmax, am)
+    return jnp.where(absmax > 0.0, absmax / qmax, 1.0)
+
+
+def _quantize_shared(x: jax.Array, scales: jax.Array, tile: int, qmax: float) -> jax.Array:
+    M, N = x.shape
+    s = jnp.repeat(jnp.repeat(scales, tile, axis=0), tile, axis=1)[:M, :N]
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / s), -qmax, qmax).astype(jnp.int32)
+
+
+def cohort_quantize_int8(
+    stats: Sequence[Fed3RStats], tile: int = 128
+) -> Tuple[List[IntPayload], jax.Array, jax.Array]:
+    """Quantize a cohort's uploads against SHARED per-tile scales.
+
+    Shared scales make the integer payloads ADDITIVE: Σ_k q_k dequantizes
+    with one multiply to Σ_k Q(x_k) — the property masked (secure)
+    aggregation needs, since the server only ever sees the masked integer
+    sum.  Returns the per-client payloads and the (A, b) scale grids.
+    """
+    sA = _shared_scales([s.A for s in stats], tile, 127.0)
+    sb = _shared_scales([s.b for s in stats], tile, 127.0)
+    payloads = [
+        IntPayload(
+            qA=_quantize_shared(s.A, sA, tile, 127.0),
+            qb=_quantize_shared(s.b, sb, tile, 127.0),
+        )
+        for s in stats
+    ]
+    return payloads, sA, sb
+
+
+def dequantize_int_sum(
+    q_sum: IntPayload, sA: jax.Array, sb: jax.Array, tile: int = 128
+) -> Tuple[jax.Array, jax.Array]:
+    """Shared-scale dequantization of an aggregated integer payload."""
+    dA, dC = q_sum.qA.shape[0], q_sum.qb.shape[1]
+    sAe = jnp.repeat(jnp.repeat(sA, tile, axis=0), tile, axis=1)[:dA, :dA]
+    sbe = jnp.repeat(jnp.repeat(sb, tile, axis=0), tile, axis=1)[:dA, :dC]
+    return q_sum.qA.astype(jnp.float32) * sAe, q_sum.qb.astype(jnp.float32) * sbe

@@ -20,6 +20,39 @@ import numpy as np
 
 FP32_BYTES = 4
 
+# wire formats of the compressed statistics uplink (repro.federated.compress)
+WIRE_KINDS = ("fp32", "int8", "fp8", "sketch")
+
+
+def stats_wire_bytes(
+    d: int, C: int, kind: str = "fp32", tile: int = 128, rank: int = 16
+) -> float:
+    """Wire bytes of ONE (A_k, b_k) statistics upload under a wire format.
+
+    The single pricing formula the cost model, the compression layer, and
+    the accuracy-vs-bytes bench all share:
+
+    * ``fp32``   — dense d² + d·C at 4 B/element (today's uplink).
+    * ``int8`` / ``fp8`` — 1 B/element payload plus one fp32 absmax scale
+      per (tile × tile) block of A and of b (the per-tile scale grid of
+      :func:`repro.kernels.quantize_tiles`): → ~4× reduction.
+    * ``sketch`` — A travels as its rank-r factor Z_k (r × d fp32, with
+      A_k ≈ Z_kᵀZ_k); b stays dense fp32.  Wins over int8 when r ≪ d/4
+      and C ≪ d (the b payload is incompressible here).
+    """
+    if kind not in WIRE_KINDS:
+        raise ValueError(f"unknown wire kind: {kind!r} (expected one of {WIRE_KINDS})")
+    if kind == "fp32":
+        return float(d * d + d * C) * FP32_BYTES
+    if kind in ("int8", "fp8"):
+        dt = -(-d // tile)  # ⌈d/tile⌉
+        ct = -(-C // tile)
+        payload = float(d * d + d * C)  # 1 byte per element
+        scales = float(dt * dt + dt * ct) * FP32_BYTES
+        return payload + scales
+    # sketch: rank-r fp32 factor of A + dense fp32 b
+    return float(rank * d + d * C) * FP32_BYTES
+
 
 @dataclass(frozen=True)
 class CostModel:
@@ -162,6 +195,27 @@ class CostModel:
         """
         return n_tenants * (self.d**2 + self.d * self.C) * FP32_BYTES
 
+    # --- compressed statistics uplink (repro.federated.compress) -----------
+
+    def compressed_stats_bytes(
+        self, kind: str, n_tenants: int = 1, tile: int = 128, rank: int = 16
+    ) -> float:
+        """Wire/retention bytes of n (A_k, b_k) uploads under a wire format.
+
+        ``kind="fp32"`` reproduces :meth:`tenant_stats_bytes` exactly; the
+        compressed kinds re-price the same payload as it actually crosses
+        the uplink (int8/fp8 tiles + scale grid, or the rank-r sketch).
+        """
+        return n_tenants * stats_wire_bytes(self.d, self.C, kind, tile, rank)
+
+    def wire_compression_ratio(
+        self, kind: str, tile: int = 128, rank: int = 16
+    ) -> float:
+        """fp32 bytes over compressed bytes for one statistics upload."""
+        return self.compressed_stats_bytes("fp32") / self.compressed_stats_bytes(
+            kind, tile=tile, rank=rank
+        )
+
     # --- continuous-batching slot serving (repro.launch.serving_engine) ----
 
     def slot_table_bytes(self, n_slots: int) -> float:
@@ -248,6 +302,9 @@ class CostModel:
         *,
         ici_bw: float = 50e9,  # bytes/s per chip, intra-pod ring (TPU v5e ICI)
         dcn_bw: float = 12.5e9,  # bytes/s per pod boundary (cross-pod DCN)
+        wire: str = "fp32",  # statistics wire format of the reduced payload
+        tile: int = 128,
+        rank: int = 16,
     ) -> Dict[str, float]:
         """Per-stage wire bytes and latency of the hierarchical all-reduce.
 
@@ -259,13 +316,19 @@ class CostModel:
         ALREADY-REDUCED payload once per pod boundary, which is why the
         hierarchy wins: a flat all-reduce would drag every intra-pod hop
         across the slow cross-pod wire.
+
+        ``wire`` re-prices the moving payload under a compressed statistics
+        format (repro.federated.compress): each device's local partial
+        crosses the wire as int8/fp8 tiles or a rank-r sketch instead of
+        dense fp32, shrinking both stages by the format's compression
+        ratio.  ``"fp32"`` reproduces the uncompressed figures exactly.
         """
         if data_parallel < 1 or n_pods < 1:
             raise ValueError(
                 f"data_parallel and n_pods must be >= 1, got "
                 f"{data_parallel}, {n_pods}"
             )
-        payload = self.stats_payload_bytes
+        payload = self.compressed_stats_bytes(wire, tile=tile, rank=rank)
         ici_bytes = 2.0 * (data_parallel - 1) / data_parallel * payload
         dcn_bytes = 2.0 * (n_pods - 1) / n_pods * payload
         ici_s = ici_bytes / ici_bw

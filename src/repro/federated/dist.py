@@ -30,7 +30,11 @@ assemble by hand.  This module owns all of it:
   reduce over the fast intra-pod ICI before the small cross-pod DCN stage
   touches the wire (the tiered device/edge/cloud aggregation of the
   heterogeneous-FL systems literature, as collectives).  The per-stage
-  bytes/latency are costed by ``repro.federated.costs.CostModel``.
+  bytes/latency are costed by ``repro.federated.costs.CostModel``
+  (``two_stage_allreduce(..., wire=...)`` re-prices the moving payload
+  under the compressed statistics formats; the engines feed their wire
+  roundtrip into :meth:`DistContext.all_reduce` via ``wire_fn`` so the
+  reduced payload actually IS the compressed one).
 
 Scheduling note: the engines place their all-reduce *after* the shard
 scan wherever the algebra allows (batch statistics, rounds), so feature
@@ -202,12 +206,23 @@ class DistContext:
         """Record one host→device dispatch (call at each host-API entry)."""
         self.dispatches += 1
 
-    def all_reduce(self, tree: Any) -> Any:
+    def all_reduce(self, tree: Any, wire_fn: Optional[Callable[[Any], Any]] = None) -> Any:
         """The server aggregation behind one interface: identity under
         ``"merge"`` (the local fold IS the global sum); the two-stage psum
-        over the resolved axes under ``"psum"`` (valid inside shard_map)."""
+        over the resolved axes under ``"psum"`` (valid inside shard_map).
+
+        ``wire_fn`` is the compressed-uplink hook
+        (:mod:`repro.federated.compress`): the engines pass their
+        wire-format roundtrip so each device's LOCAL partial crosses the
+        ICI/DCN wire in the configured format — compressed on the way out,
+        dequantized ONCE at the aggregation boundary before the psum sums
+        the received payloads.  ``None`` (and the ``"merge"`` backend,
+        whose uplink compression happens per client inside the engine
+        fold) keeps the reduce bit-exact fp32."""
         if self.cfg.aggregation == "merge":
             return tree
+        if wire_fn is not None:
+            tree = wire_fn(tree)
         return two_stage_psum(tree, self.cfg.axis_names)
 
     def data_spec(self, axis: int = 0):

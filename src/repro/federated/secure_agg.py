@@ -14,10 +14,22 @@ Individual uploads are fully masked (marginally uniform given unknown
 masks); the server learns nothing but the sum.  The psum/merge aggregation
 paths accept masked statistics unchanged — demonstrating the paper's claim
 that FED3R composes with secure aggregation *by construction*.
+
+Compressed-uplink interop (:mod:`repro.federated.compress`): the float
+masking above assumes exact cancellation, which fp32 only gives because
+addition of identical magnitudes is exact — but a QUANTIZED upload is an
+integer payload, and the protocol-correct masking there is INTEGER masking
+mod 2³²: uniform int32 masks added with two's-complement wraparound cancel
+EXACTLY in the aggregate, bit for bit.  :func:`mask_quantized_payload` /
+:func:`secure_aggregate_quantized` implement that ring arithmetic over the
+shared-scale int8-valued payloads of
+:func:`repro.federated.compress.cohort_quantize_int8`; the masked cohort
+sum dequantizes to exactly the unmasked aggregate, so secure aggregation
+survives wire compression with zero additional error.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import Any, List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -58,4 +70,69 @@ def secure_aggregate(
     total = masked[0]
     for s in masked[1:]:
         total = jax.tree.map(lambda a, b: a + b, total, s)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Integer masking mod 2³² over quantized (compressed-uplink) payloads
+# ---------------------------------------------------------------------------
+
+
+def _pair_mask_int(seed: int, u: int, v: int, like: Any) -> Any:
+    """Deterministic pairwise int32 mask m_{uv} (u < v), uniform over the
+    full mod-2³² ring (random bits bitcast to int32)."""
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), 2**20 + u), v
+    )
+    leaves, treedef = jax.tree.flatten(like)
+    keys = jax.random.split(key, len(leaves))
+    masks = [
+        jax.lax.bitcast_convert_type(
+            jax.random.bits(k, leaf.shape, jnp.uint32), jnp.int32
+        )
+        for k, leaf in zip(keys, leaves)
+    ]
+    return jax.tree.unflatten(treedef, masks)
+
+
+def mask_quantized_payload(
+    payload: Any, client_id: int, cohort: Sequence[int], seed: int
+) -> Any:
+    """Pairwise integer masking of a quantized upload (int32 leaves).
+
+    Identical protocol shape to :func:`mask_statistics`, but the masks add
+    in the mod-2³² ring (XLA int32 addition wraps, two's complement), so
+    the aggregate cancellation is EXACT — no fp rounding anywhere.
+    """
+    leaves = jax.tree.leaves(payload)
+    if any(leaf.dtype != jnp.int32 for leaf in leaves):
+        raise TypeError(
+            "mask_quantized_payload masks int32 payloads (see "
+            "repro.federated.compress.cohort_quantize_int8); got dtypes "
+            f"{[str(leaf.dtype) for leaf in leaves]}"
+        )
+    out = payload
+    for v in cohort:
+        if v == client_id:
+            continue
+        u, w = sorted((client_id, v))
+        m = _pair_mask_int(seed, u, w, payload)
+        if client_id == u:
+            out = jax.tree.map(lambda a, b: a + b, out, m)
+        else:
+            out = jax.tree.map(lambda a, b: a - b, out, m)
+    return out
+
+
+def secure_aggregate_quantized(masked: List[Any]) -> Any:
+    """Mod-2³² sum of masked integer payloads — masks cancel bit-exactly.
+
+    The true (unmasked) cohort sum of int8-valued entries is far inside
+    int32 range, so after the masks cancel the wrapped sum IS the plain
+    integer sum; dequantize it with the cohort's shared scales
+    (:func:`repro.federated.compress.dequantize_int_sum`).
+    """
+    total = masked[0]
+    for p in masked[1:]:
+        total = jax.tree.map(lambda a, b: a + b, total, p)
     return total

@@ -34,6 +34,14 @@ per-arrival Python loop over the fp32-hazardous subtractive
   the per-wave psum is inherently on the critical path (wave t+1's factor
   needs the reduced wave-t Gram); ``refresh_every`` bounds the solve cost.
 
+Compressed uplink (:mod:`repro.federated.compress`): with
+``StreamConfig(wire=WireFormat(kind="int8" | "fp8" | "sketch"))`` each
+wave's rank-n statistics (S, Δb) cross the wire compressed — quantized
+client-side, landed in the carried Gram through the fused dequantize-
+accumulate (merge), or roundtripped per device partial before the psum —
+still one dispatch per timeline; ``"fp32"`` keeps the scan bitwise
+identical to today.
+
 Exactness: each wave's clients are canonically packed (sorted by id), so
 the folded state — and the final W — is bitwise invariant to the
 presentation order of concurrent arrivals; across waves the stream order
@@ -54,6 +62,8 @@ from repro.core import fed3r
 from repro.core.fed3r import Fed3RFactored
 from repro.core.random_features import RFFParams, rff_map
 from repro.data.pipeline import PackedArrivals
+from repro.federated import compress
+from repro.federated.compress import WireFormat
 from repro.federated.dist import (
     DistConfig,
     DistContext,
@@ -76,6 +86,10 @@ class StreamConfig:
     normalize: bool = True  # per-class column normalization of the served W
     use_kernel: Optional[bool] = None  # None → auto (Pallas on TPU, XLA else)
     dist: DistConfig = field(default_factory=DistConfig)  # backend/mesh/donate
+    # statistics wire format (repro.federated.compress): each wave's rank-n
+    # (S, Δb) upload crosses the wire compressed before it touches the
+    # carried factor; "fp32" keeps the scan bitwise identical to today
+    wire: WireFormat = field(default_factory=WireFormat)
 
 
 class StreamState(NamedTuple):
@@ -126,6 +140,7 @@ class StreamingEngine(DistDispatchMixin):
         self.cfg = cfg
         self.feature_fn = feature_fn
         self.rff_params = rff_params
+        self.wire = cfg.wire.resolved()  # fp8 → int8 fallback off-TPU
         self.dist = DistContext(cfg.dist)
         # mesh mode: shard the wave-WIDTH axis (dim 1; dim 0 is the scanned
         # arrival clock) over the data axes; state/params replicated
@@ -154,6 +169,18 @@ class StreamingEngine(DistDispatchMixin):
     def _use_kernel(self) -> bool:
         return resolve_use_kernel(self.cfg.use_kernel)
 
+    def _wire_fn(self):
+        """The dist layer's compressed-payload hook (None under fp32)."""
+        if self.wire.kind == "fp32":
+            return None
+
+        def roundtrip(tree):
+            S, dB, nw = tree
+            S, dB = compress.wire_roundtrip(S, dB, self.wire, self.cfg.use_kernel)
+            return (S, dB, nw)
+
+        return roundtrip
+
     def _solve(self, L: jax.Array, b: jax.Array) -> jax.Array:
         """Two triangular solves against the carried factor (the refresh)."""
         return fed3r.factored_solution(
@@ -176,21 +203,52 @@ class StreamingEngine(DistDispatchMixin):
         if self.cfg.dist.aggregation == "psum":
             # local rank-n statistics, all-reduced (two stages on a pod
             # mesh) before the replicated refactorization — the fused G
-            # kernel would double-count L Lᵀ
+            # kernel would double-count L Lᵀ.  A compressed wire format
+            # rides the dist hook: each device's partial (S, Δb) crosses
+            # the ICI/DCN wire compressed, dequantized at the boundary.
             if self._use_kernel():
                 S, dB = fed3r_stats_kernel(z, yh)
             else:
                 S, dB = z.T @ z, z.T @ yh
-            S, dB, nw = self.dist.all_reduce((S, dB, nw))
+            S_local = S
+            S, dB, nw = self.dist.all_reduce((S, dB, nw), wire_fn=self._wire_fn())
             G = state.L @ state.L.T + S
+            b = state.b + dB
+        elif self.wire.kind != "fp32":
+            # compressed uplink, merge backend: the wave's rank-n upload
+            # (S, Δb) quantizes client-side and lands in the carried Gram /
+            # class sums through the fused dequantize-accumulate — the
+            # fused G kernel is bypassed because the wire sits between the
+            # sample GEMMs and the factor reconstruction
+            if self._use_kernel():
+                S, dB = fed3r_stats_kernel(z, yh)
+            else:
+                S, dB = z.T @ z, z.T @ yh
+            G, b = compress.roundtrip_add(
+                state.L @ state.L.T, state.b, S, dB, self.wire, self.cfg.use_kernel
+            )
+            S_local = S
         elif self._use_kernel():
             G, dB = chol_gram_kernel(state.L, z, yh)
+            b = state.b + dB
+            S_local = None
         else:
             G = state.L @ state.L.T + z.T @ z
             dB = z.T @ yh
+            b = state.b + dB
+            S_local = None
 
-        L = jnp.linalg.cholesky(G)
-        b = state.b + dB
+        if self.wire.kind in ("int8", "fp8") and S_local is not None:
+            # quantization noise can push the smallest eigenvalues of the
+            # received Ŝ negative on rank-deficient waves (early stream, few
+            # samples ≪ d); factor with data-dependent jitter — a ridge of a
+            # few quantization steps, applied only when the plain Cholesky
+            # actually produced NaN
+            L = compress.psd_cholesky(
+                G, compress.quant_spectral_bound(S_local, self.wire)
+            )
+        else:
+            L = jnp.linalg.cholesky(G)
         n = state.n + nw
         t = state.wave + 1
 

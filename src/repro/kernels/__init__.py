@@ -15,6 +15,11 @@ wrapper in ops.py:
   * rff             — fused random-features map √(2/D)·cos(ZΩ + β).
   * flash_attention — online-softmax causal GQA attention (prefill path),
                       with sliding-window masking.
+  * quantize_tiles / dequant_accumulate — the compressed statistics uplink
+                      (repro.federated.compress): per-tile absmax int8
+                      quantize+pack on the client, fused dequantize-
+                      accumulate into the fp32 A accumulator on the server
+                      (no dense dequantized intermediate in HBM).
 
 All kernels use explicit BlockSpec VMEM tiling with 128-aligned MXU tile
 shapes; on this CPU container they are validated in interpret mode
@@ -23,7 +28,9 @@ shapes; on this CPU container they are validated in interpret mode
 from repro.kernels.ops import (  # noqa: F401
     batched_chol_gram,
     chol_gram,
+    dequant_accumulate,
     fed3r_stats,
     flash_attention,
+    quantize_tiles,
     rff_transform,
 )

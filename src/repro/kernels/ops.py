@@ -13,6 +13,7 @@ import jax
 from repro.kernels.chol_update import batched_chol_gram_pallas, chol_gram_pallas
 from repro.kernels.fed3r_stats import fed3r_stats_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.quant import dequant_acc_pallas, quantize_tiles_pallas
 from repro.kernels.rff import rff_pallas
 
 
@@ -37,6 +38,18 @@ def batched_chol_gram(
 ) -> Tuple[jax.Array, jax.Array]:
     """Grid-over-heads Gram updates (G_k, B_k) = (L Lᵀ + Z_kᵀZ_k, Z_kᵀY_k)."""
     return batched_chol_gram_pallas(L, Z, Y, interpret=_interpret())
+
+
+def quantize_tiles(x: jax.Array, *, tile: int = 128) -> Tuple[jax.Array, jax.Array]:
+    """Per-tile absmax int8 quantization (q, scales) of the wire payload."""
+    return quantize_tiles_pallas(x, tile=tile, interpret=_interpret())
+
+
+def dequant_accumulate(
+    acc: jax.Array, q: jax.Array, scales: jax.Array, *, tile: int = 128
+) -> jax.Array:
+    """Fused dequantize-accumulate acc + q·s (no dense HBM intermediate)."""
+    return dequant_acc_pallas(acc, q, scales, tile=tile, interpret=_interpret())
 
 
 def rff_transform(Z: jax.Array, omega: jax.Array, beta: jax.Array) -> jax.Array:

@@ -32,6 +32,41 @@ def batched_chol_gram_ref(
     return jax.vmap(chol_gram_ref, in_axes=(None, 0, 0))(L, Z, Y)
 
 
+def quantize_tiles_ref(
+    x: jax.Array, tile: int = 128, qmax: float = 127.0
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-tile absmax symmetric int8 quantization: (q, scales).
+
+    x: (M, N) → q (M, N) int8, scales (⌈M/tile⌉, ⌈N/tile⌉) fp32 with
+    s = max|tile| / qmax (1.0 for all-zero tiles so q = 0 exactly).
+    Round-half-to-even, matching the Pallas kernel bitwise.
+    """
+    M, N = x.shape
+    xf = x.astype(jnp.float32)
+    p0, p1 = (-M) % tile, (-N) % tile
+    xp = jnp.pad(xf, ((0, p0), (0, p1))) if (p0 or p1) else xf
+    Mt, Nt = xp.shape[0] // tile, xp.shape[1] // tile
+    blocks = xp.reshape(Mt, tile, Nt, tile)
+    absmax = jnp.max(jnp.abs(blocks), axis=(1, 3))
+    scales = jnp.where(absmax > 0.0, absmax / qmax, 1.0)
+    q = jnp.clip(jnp.round(blocks / scales[:, None, :, None]), -qmax, qmax)
+    q = q.astype(jnp.int8).reshape(xp.shape)[:M, :N]
+    return q, scales
+
+
+def dequant_acc_ref(
+    acc: jax.Array, q: jax.Array, scales: jax.Array, tile: int = 128
+) -> jax.Array:
+    """acc + dequantize(q, scales): the unfused oracle of the fused kernel.
+
+    Expands the per-tile scales to a dense (M, N) fp32 array — exactly the
+    HBM intermediate the Pallas kernel avoids.
+    """
+    M, N = acc.shape
+    s = jnp.repeat(jnp.repeat(scales, tile, axis=0), tile, axis=1)[:M, :N]
+    return acc.astype(jnp.float32) + q.astype(jnp.float32) * s
+
+
 def rff_ref(Z: jax.Array, omega: jax.Array, beta: jax.Array) -> jax.Array:
     """√(2/D)·cos(ZΩ + β) in fp32. Z: (n, d); Ω: (d, D); β: (D,)."""
     D = omega.shape[1]
