@@ -1,0 +1,196 @@
+"""Asynchronous merge-on-arrival rounds vs the synchronous barrier.
+
+The claims under test (ISSUE 8 acceptance):
+
+* at 20% simulated stragglers (8× slower uploads) the async engine's
+  round-completion makespan is ≥ 1.5× faster than the synchronous
+  barrier replaying the SAME chaos-injected upload timeline — the barrier
+  waits for every straggler, the async cadence closes at the deadline and
+  folds stragglers late under the staleness bound;
+* the final W of the two runs is BITWISE identical (merge-on-arrival is a
+  reordering of the same statistics sum, and the engine's slot/retire
+  design makes the fp32 operand sequence identical) with zero dropped
+  uploads;
+* adaptive dropout: with per-client health demotion enabled, persistent
+  stragglers leave the sampled cohorts after ``demote_after`` blown
+  deadlines and the steady-state rounds complete at the fast cohort's
+  pace — the completion-time-vs-dropout curve.
+
+Simulated time is deterministic in the seeds (wall time appears only as
+``wall_s``), so the speedup gates stably in CI via
+``baselines/BENCH_async.json``.
+
+Usage: PYTHONPATH=src:. python benchmarks/bench_async.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import fed3r
+from repro.data.pipeline import make_federated_features
+from repro.federated.arrivals import ChaosSpec, chaos_timeline, latency_profile
+from repro.federated.async_engine import (
+    AsyncConfig,
+    AsyncRoundEngine,
+    client_payloads,
+    run_adaptive_rounds,
+    run_chaos_timeline,
+)
+from repro.federated.costs import CostModel
+
+D_FEAT = 48
+N_CLASSES = 10
+RIDGE_LAMBDA = 1e-2
+STRAGGLER_FRAC = 0.2
+STRAGGLER_FACTOR = 8.0
+BASE_LATENCY = 0.3
+DEADLINE = 1.0
+
+
+def _build(n_clients, cohort, *, synchronous, staleness=3, early_close=False,
+           demote_after=10_000):
+    # demote_after is effectively off for the parity legs: both runs must
+    # sample identical cohorts, so health-based demotion stays out of them
+    return AsyncRoundEngine(AsyncConfig(
+        n_classes=N_CLASSES, ridge_lambda=RIDGE_LAMBDA, cohort=cohort,
+        deadline=DEADLINE, staleness_rounds=staleness,
+        synchronous=synchronous, early_close=early_close,
+        demote_after=demote_after,
+    ))
+
+
+def main(smoke: bool = False) -> dict:
+    n_rounds = 8 if smoke else 16
+    n_clients = 24 if smoke else 48
+    cohort = 10 if smoke else 16
+    seed = 0
+
+    fed, test = make_federated_features(
+        seed=seed, n=3000, d=D_FEAT, n_classes=N_CLASSES,
+        n_clients=n_clients, alpha=0.3, noise=2.0,
+    )
+    payloads = client_payloads(fed, N_CLASSES)
+    # per-round draws without replacement (epoch-style sample_round can
+    # repeat a client inside a round when the window spans an epoch edge)
+    cohorts = [
+        sorted(
+            np.random.default_rng((seed + 1, r))
+            .choice(n_clients, size=cohort, replace=False)
+            .tolist()
+        )
+        for r in range(n_rounds)
+    ]
+    latency = latency_profile(
+        n_clients, STRAGGLER_FRAC, straggler_factor=STRAGGLER_FACTOR,
+        base=BASE_LATENCY, jitter=0.5, seed=seed + 2,
+    )
+    # bounded-tail chaos: drops retransmit within 3 RTOs, no transient delay
+    # fault on top of the persistent straggler profile — so every upload
+    # lands inside the staleness window and the parity claim is exact-once
+    spec = ChaosSpec(
+        drop=0.2, duplicate=0.1, reorder=0.3, rto=0.1, max_attempts=4,
+        seed=seed + 3,
+    )
+    events = chaos_timeline(cohorts, latency, spec)
+
+    def payload_for(c, r):
+        return payloads[c]
+
+    t0 = time.time()
+    e_async = _build(n_clients, cohort, synchronous=False)
+    s_async, rep_async = run_chaos_timeline(
+        e_async, e_async.init(D_FEAT), cohorts, events, payload_for
+    )
+    async_wall = time.time() - t0
+
+    t0 = time.time()
+    e_sync = _build(n_clients, cohort, synchronous=True)
+    s_sync, rep_sync = run_chaos_timeline(
+        e_sync, e_sync.init(D_FEAT), cohorts, events, payload_for
+    )
+    sync_wall = time.time() - t0
+
+    parity = bool(np.array_equal(np.asarray(s_async.W), np.asarray(s_sync.W)))
+    speedup = rep_sync["makespan"] / rep_async["makespan"]
+    acc = float(fed3r.accuracy(
+        s_async.W, np.asarray(test.features), np.asarray(test.labels)
+    ))
+
+    # adaptive dropout: persistent stragglers demoted out of the cohorts;
+    # steady-state rounds close at the fast cohort's early-close pace
+    e_adapt = AsyncRoundEngine(AsyncConfig(
+        n_classes=N_CLASSES, ridge_lambda=RIDGE_LAMBDA, cohort=cohort,
+        deadline=DEADLINE, staleness_rounds=3, demote_after=2, cooldown=2 * n_rounds,
+    ))
+    _, rep_adapt = run_adaptive_rounds(
+        e_adapt, e_adapt.init(D_FEAT), n_clients, cohort, n_rounds,
+        latency, spec, payload_for, seed=seed + 4,
+    )
+    tail = rep_adapt["completion"][n_rounds // 2:]
+    adaptive_tail = float(np.mean(tail))
+
+    analytic = CostModel(b=2.22e6, d=D_FEAT, C=N_CLASSES).straggler_tail(
+        cohort, STRAGGLER_FRAC, straggler_factor=STRAGGLER_FACTOR,
+        base_s=BASE_LATENCY, deadline_s=DEADLINE,
+    )
+
+    emit(
+        "async_sync_barrier", sync_wall * 1e6,
+        f"R={n_rounds} K={cohort} makespan={rep_sync['makespan']:.2f}",
+    )
+    emit(
+        "async_merge_on_arrival", async_wall * 1e6,
+        f"R={n_rounds} K={cohort} makespan={rep_async['makespan']:.2f} "
+        f"speedup={speedup:.2f}x parity={parity} acc={acc:.3f}",
+    )
+    emit(
+        "async_adaptive_dropout", 0.0,
+        f"demoted={len(rep_adapt['demoted'])} "
+        f"tail_completion={adaptive_tail:.3f}s vs deadline={DEADLINE}",
+    )
+
+    assert parity, "async W diverged from the synchronous barrier (bitwise)"
+    assert rep_async["dropped_uploads"] == 0, (
+        f"staleness window dropped {rep_async['dropped_uploads']} uploads; "
+        "the parity comparison needs exact-once delivery"
+    )
+    assert speedup >= 1.5, (
+        f"async round completion must be >= 1.5x the barrier at "
+        f"{STRAGGLER_FRAC:.0%} stragglers, got {speedup:.2f}x"
+    )
+    assert adaptive_tail < DEADLINE, (
+        f"adaptive dropout should close steady-state rounds before the "
+        f"deadline, got {adaptive_tail:.3f}s"
+    )
+
+    return {
+        "rounds": n_rounds,
+        "cohort": cohort,
+        "n_clients": n_clients,
+        "straggler_frac": STRAGGLER_FRAC,
+        "sync_makespan": rep_sync["makespan"],
+        "async_makespan": rep_async["makespan"],
+        "round_speedup": speedup,
+        "analytic_speedup": analytic["speedup"],
+        "parity_bitwise": parity,
+        "dropped_uploads": rep_async["dropped_uploads"],
+        "late_folds": rep_async["late_folds"],
+        "duplicates_deduped": rep_async["duplicates"],
+        "async_dispatches": rep_async["dispatches"],
+        "adaptive_demoted": len(rep_adapt["demoted"]),
+        "adaptive_tail_completion": adaptive_tail,
+        "acc_async": acc,
+        "wall_s": async_wall + sync_wall,
+    }
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small config (CI budget)")
+    args = ap.parse_args()
+    out = main(smoke=args.smoke)
+    print(out)

@@ -1,0 +1,183 @@
+"""Chaos-mode CI gate: replay seeded fault schedules, require bitwise W parity.
+
+Each schedule is a deterministic fault-injected upload timeline (drops with
+retransmit, duplicates, reordering, transient delay) over a fixed cohort
+sequence.  For every schedule the gate runs the asynchronous merge-on-arrival
+engine AND the synchronous barrier over the SAME timeline and asserts:
+
+* final ``W`` is bitwise identical between the two runs, and
+* the staleness window dropped zero uploads (exact-once delivery — the
+  precondition for the parity claim).
+
+On any divergence the offending schedule is persisted as JSON under
+``chaos_failures/`` (uploaded as a CI artifact) and the process exits 1; the
+schedule can then be rerun offline with ``--replay <file>``.
+
+Usage:
+    PYTHONPATH=src:. python benchmarks/chaos_replay.py            # all 8 gates
+    PYTHONPATH=src:. python benchmarks/chaos_replay.py --replay chaos_failures/x.json
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.federated.arrivals import (
+    ChaosSpec,
+    UploadEvent,
+    chaos_timeline,
+    latency_profile,
+    timeline_from_json,
+    timeline_to_json,
+)
+from repro.federated.async_engine import (
+    AsyncConfig,
+    AsyncRoundEngine,
+    client_payloads,
+    run_chaos_timeline,
+)
+from repro.data.pipeline import make_federated_features
+
+D_FEAT = 32
+N_CLASSES = 8
+RIDGE_LAMBDA = 1e-2
+N_CLIENTS = 16
+COHORT = 6
+N_ROUNDS = 6
+DEADLINE = 1.0
+STALENESS = 4
+
+# 2 seeds x 4 fault profiles = the 8 schedules the CI job replays.  Each
+# profile stresses one fault mode; rto/max_attempts bound the retransmit
+# tail so every upload lands inside the staleness window.
+PROFILES = {
+    "drop_heavy": ChaosSpec(drop=0.5, duplicate=0.0, reorder=0.0, delay=0.0,
+                            rto=0.1, max_attempts=6),
+    "duplicate_heavy": ChaosSpec(drop=0.1, duplicate=0.6, reorder=0.1, delay=0.0,
+                                 rto=0.1, max_attempts=4),
+    "reorder_heavy": ChaosSpec(drop=0.1, duplicate=0.1, reorder=0.8, delay=0.0,
+                               rto=0.1, max_attempts=4),
+    "delay_heavy": ChaosSpec(drop=0.1, duplicate=0.1, reorder=0.2, delay=0.4,
+                             delay_factor=2.0, rto=0.1, max_attempts=4),
+}
+SEEDS = (0, 1)
+
+
+def _schedules() -> List[Tuple[str, List[List[int]], np.ndarray, ChaosSpec,
+                               List[UploadEvent]]]:
+    out = []
+    for seed in SEEDS:
+        latency = latency_profile(
+            N_CLIENTS, 0.2, straggler_factor=4.0, base=0.3, jitter=0.5, seed=seed
+        )
+        cohorts = [
+            sorted(
+                np.random.default_rng((seed, r, 0xC0407))
+                .choice(N_CLIENTS, size=COHORT, replace=False)
+                .tolist()
+            )
+            for r in range(N_ROUNDS)
+        ]
+        for name, base_spec in PROFILES.items():
+            spec = ChaosSpec(**{**base_spec.__dict__, "seed": seed})
+            events = chaos_timeline(cohorts, latency, spec)
+            out.append((f"{name}_seed{seed}", cohorts, latency, spec, events))
+    return out
+
+
+def _payloads():
+    fed, _ = make_federated_features(
+        seed=7, n=1200, d=D_FEAT, n_classes=N_CLASSES,
+        n_clients=N_CLIENTS, alpha=0.3, noise=2.0,
+    )
+    return client_payloads(fed, N_CLASSES)
+
+
+def _engine(synchronous: bool) -> AsyncRoundEngine:
+    return AsyncRoundEngine(AsyncConfig(
+        n_classes=N_CLASSES, ridge_lambda=RIDGE_LAMBDA, cohort=COHORT,
+        deadline=DEADLINE, staleness_rounds=STALENESS,
+        synchronous=synchronous, early_close=False, demote_after=10_000,
+    ))
+
+
+def check_schedule(
+    name: str,
+    cohorts: Sequence[Sequence[int]],
+    events: Sequence[UploadEvent],
+    payloads,
+) -> Tuple[bool, str]:
+    def payload_for(c, r):
+        return payloads[c]
+
+    e_async = _engine(synchronous=False)
+    s_async, rep_async = run_chaos_timeline(
+        e_async, e_async.init(D_FEAT), cohorts, events, payload_for
+    )
+    e_sync = _engine(synchronous=True)
+    s_sync, _ = run_chaos_timeline(
+        e_sync, e_sync.init(D_FEAT), cohorts, events, payload_for
+    )
+    Wa, Ws = np.asarray(s_async.W), np.asarray(s_sync.W)
+    if rep_async["dropped_uploads"] != 0:
+        return False, (
+            f"{name}: {rep_async['dropped_uploads']} uploads fell outside "
+            f"the staleness window"
+        )
+    if not np.array_equal(Wa, Ws):
+        return False, (
+            f"{name}: W diverged, max abs diff {np.abs(Wa - Ws).max():.3e}"
+        )
+    return True, (
+        f"{name}: W bitwise equal  "
+        f"(folds={rep_async['folded']} late={rep_async['late_folds']} "
+        f"dups={rep_async['duplicates']})"
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--replay", metavar="JSON",
+        help="rerun one persisted failure schedule instead of the full gate",
+    )
+    ap.add_argument(
+        "--out-dir", default="chaos_failures",
+        help="where offending schedules are written (CI artifact dir)",
+    )
+    args = ap.parse_args()
+
+    payloads = _payloads()
+
+    if args.replay:
+        sched = timeline_from_json(Path(args.replay).read_text())
+        ok, msg = check_schedule(
+            Path(args.replay).stem, sched["cohorts"], sched["events"], payloads
+        )
+        print(msg)
+        return 0 if ok else 1
+
+    failures = 0
+    for name, cohorts, latency, spec, events in _schedules():
+        ok, msg = check_schedule(name, cohorts, events, payloads)
+        print(("PASS  " if ok else "FAIL  ") + msg)
+        if not ok:
+            failures += 1
+            out = Path(args.out_dir)
+            out.mkdir(parents=True, exist_ok=True)
+            path = out / f"{name}.json"
+            path.write_text(timeline_to_json(cohorts, latency, spec, events))
+            print(f"      schedule persisted to {path}")
+    if failures:
+        print(f"{failures} schedule(s) diverged")
+        return 1
+    print("all 8 chaos schedules: async W bitwise equal to the sync barrier")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to paper artifacts:
   bench_serving          (slot serving)    continuous-batching slots vs synchronous LRU
   bench_scaleout         (dist layer)      weak scaling of the one-dispatch engines
   bench_compress         (wire formats)    accuracy-vs-bytes of compressed uploads
+  bench_async            (async engine)    merge-on-arrival vs sync barrier @ stragglers
   roofline               §Roofline         dry-run roofline table
 
 Modules listed in ``JSON_OUT`` additionally persist their result dict as a
@@ -47,6 +48,7 @@ MODULES = [
     "bench_serving",
     "bench_scaleout",
     "bench_compress",
+    "bench_async",
     "bench_invariance",
     "bench_ncm",
     "bench_rf",
@@ -66,6 +68,7 @@ JSON_OUT = {
     "bench_serving": "serving",
     "bench_scaleout": "scaleout",
     "bench_compress": "compress",
+    "bench_async": "async",
 }
 
 

@@ -25,6 +25,14 @@ from repro.federated.round_engine import (  # noqa: F401
     RoundConfig,
     RoundEngine,
 )
+from repro.federated.async_engine import (  # noqa: F401
+    AsyncConfig,
+    AsyncRoundEngine,
+    AsyncState,
+    ClientHealth,
+    run_adaptive_rounds,
+    run_chaos_timeline,
+)
 from repro.federated.streaming_engine import (  # noqa: F401
     ReferenceArrivalLoop,
     StreamConfig,

@@ -92,6 +92,24 @@ def fp8_supported() -> bool:
         return False
 
 
+@functools.lru_cache(maxsize=1)
+def _warn_fp8_fallback() -> None:
+    """Emit the fp8→int8 fallback warning once per process.
+
+    The backend's fp8 support cannot change within a process
+    (:func:`fp8_supported` is itself cached), so repeating the warning on
+    every engine construction is pure noise; tests reset via
+    ``_warn_fp8_fallback.cache_clear()``.
+    """
+    warnings.warn(
+        "fp8 wire format is unsupported on backend "
+        f"{jax.default_backend()!r}; falling back to int8 (identical "
+        "wire bytes, round-to-nearest int mantissa)",
+        RuntimeWarning,
+        stacklevel=4,  # engine ctor → WireFormat.resolved → here
+    )
+
+
 @dataclass(frozen=True)
 class WireFormat:
     """Static wire-format configuration of the statistics uplink.
@@ -121,17 +139,12 @@ class WireFormat:
 
     def resolved(self) -> "WireFormat":
         """The format actually used on this backend: fp8 degrades to int8
-        (same byte count, finer mantissa) with a warning when the backend
-        cannot represent ``float8_e4m3fn`` — tier-1 CPU CI never hard-fails
-        on dtype support."""
+        (same byte count, finer mantissa) with a ONE-PER-PROCESS warning
+        when the backend cannot represent ``float8_e4m3fn`` — tier-1 CPU CI
+        never hard-fails on dtype support, and a deployment constructing
+        hundreds of engines isn't drowned in identical warnings."""
         if self.kind == "fp8" and not fp8_supported():
-            warnings.warn(
-                "fp8 wire format is unsupported on backend "
-                f"{jax.default_backend()!r}; falling back to int8 (identical "
-                "wire bytes, round-to-nearest int mantissa)",
-                RuntimeWarning,
-                stacklevel=2,
-            )
+            _warn_fp8_fallback()
             return replace(self, kind="int8")
         return self
 

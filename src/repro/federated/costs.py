@@ -14,7 +14,7 @@ All communication figures are in *parameters per client per round*
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -345,6 +345,51 @@ class CostModel:
             "dcn_s": dcn_s,
             "total_s": ici_s + dcn_s,
             "flat_allreduce_s": flat_s,
+        }
+
+    # --- straggler-tail round pricing (repro.federated.async_engine) --------
+
+    def straggler_tail(
+        self,
+        clients_per_round: int,
+        straggler_frac: float,
+        *,
+        straggler_factor: float = 8.0,
+        base_s: float = 0.3,
+        deadline_s: Optional[float] = None,
+    ) -> Dict[str, float]:
+        """Expected round-completion time: synchronous barrier vs async close.
+
+        The synchronous engines complete a round at the MAX of the cohort's
+        upload latencies, so any sampled straggler (latency ≈
+        ``straggler_factor × base_s``) stretches the whole round; with a
+        straggler fraction p the probability a K-client round contains at
+        least one is 1 − (1−p)^K — near-certain already at K = 16, p = 0.2.
+        The asynchronous engine closes at ``deadline_s`` regardless (late
+        uploads keep merging under the staleness bound), so its completion
+        is min(deadline, tail).  The returned ``speedup`` is the analytic
+        counterpart of the measured ``benchmarks/bench_async.py`` figure;
+        wire bytes are unchanged (the same uploads move, just later), so
+        this prices TIME, not bytes.
+        """
+        if clients_per_round < 1:
+            raise ValueError(
+                f"clients_per_round must be >= 1, got {clients_per_round}"
+            )
+        if not 0.0 <= straggler_frac <= 1.0:
+            raise ValueError(
+                f"straggler_frac must be in [0, 1], got {straggler_frac}"
+            )
+        p_tail = 1.0 - (1.0 - straggler_frac) ** clients_per_round
+        tail_s = straggler_factor * base_s
+        sync_s = p_tail * tail_s + (1.0 - p_tail) * base_s
+        deadline = base_s if deadline_s is None else deadline_s
+        async_s = min(deadline, sync_s)
+        return {
+            "p_straggler_round": p_tail,
+            "sync_round_s": sync_s,
+            "async_round_s": async_s,
+            "speedup": sync_s / async_s if async_s > 0 else float("inf"),
         }
 
     def personalization_vs_model_push_ratio(self) -> float:

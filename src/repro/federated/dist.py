@@ -95,6 +95,27 @@ def _shard_map(fn: Callable, mesh, in_specs, out_specs) -> Callable:
                            out_specs=out_specs, check_rep=False)
 
 
+def shard_cohort(
+    cohort: Tuple[int, ...], shard: int, n_shards: int
+) -> Tuple[int, ...]:
+    """Deterministic partition of a (possibly partial) cohort across shards.
+
+    The psum-mode contract of the merge-on-arrival engine
+    (:mod:`repro.federated.async_engine`): each shard scatters ONLY the
+    uploads of the clients it owns — ``shard_cohort(cohort, i, n)`` for
+    shard i — leaving every other slot an exact zero, and the retire
+    all-reduce reassembles the full cohort sum.  Round-robin by sorted
+    cohort position, so the partition is independent of arrival order,
+    covers every client exactly once, and stays balanced even when the
+    cohort is PARTIAL (fewer clients than slots: late joiners, demoted
+    stragglers dropped by the health tracker).
+    """
+    if not 0 <= shard < n_shards:
+        raise ValueError(f"shard {shard} out of range for {n_shards} shards")
+    ordered = sorted(int(c) for c in cohort)
+    return tuple(c for i, c in enumerate(ordered) if i % n_shards == shard)
+
+
 def two_stage_psum(tree: Any, axis_names: Tuple[str, ...]) -> Any:
     """Hierarchical all-reduce: one psum per axis, innermost (last) first.
 

@@ -26,6 +26,14 @@ shared-scale int8-valued payloads of
 :func:`repro.federated.compress.cohort_quantize_int8`; the masked cohort
 sum dequantizes to exactly the unmasked aggregate, so secure aggregation
 survives wire compression with zero additional error.
+
+Timeout tolerance (Bonawitz et al.'s unmasking round): when clients drop
+AFTER masking, the survivors' sum retains the orphaned pairwise masks of
+the dropped — :func:`recover_survivor_sum` /
+:func:`recover_survivor_sum_quantized` reconstruct and cancel them, so a
+dropped client never poisons the aggregate; the mod-2³² variant is
+bit-exact and is what the asynchronous round engine's secure mode uses
+(:mod:`repro.federated.async_engine`).
 """
 from __future__ import annotations
 
@@ -136,3 +144,101 @@ def secure_aggregate_quantized(masked: List[Any]) -> Any:
     for p in masked[1:]:
         total = jax.tree.map(lambda a, b: a + b, total, p)
     return total
+
+
+# ---------------------------------------------------------------------------
+# Timeout-tolerant dropout recovery (Bonawitz et al. §unmasking round)
+# ---------------------------------------------------------------------------
+#
+# When client j times out AFTER the cohort masked its uploads against j, the
+# sum over the survivors S retains every pairwise mask that had exactly one
+# endpoint in S and the other among the dropped D:
+#
+#     Σ_{u∈S} y_u = Σ_{u∈S} x_u + Σ_{u∈S, j∈D} sign(u, j)·m_{uj}
+#
+# (survivor–survivor masks appear with both signs and cancel; dropped–dropped
+# masks never entered).  The protocol's unmasking round has the survivors
+# reveal their pairwise PRG seeds with the dropped clients so the server can
+# reconstruct and subtract that orphan total — here the seeds ARE the
+# deterministic (seed, u, v) PRG inputs, so reconstruction is a direct
+# re-derivation.  In the mod-2³² integer ring the subtraction cancels
+# BIT-EXACTLY (two's-complement wraparound is a group); in float it cancels
+# to fp tolerance only, which is why the engines' secure mode rides the
+# quantized path (:mod:`repro.federated.async_engine`).
+
+
+def _orphan_total(
+    survivors: Sequence[int],
+    dropped: Sequence[int],
+    seed: int,
+    like: Any,
+    mask_fn,
+) -> Any:
+    """Σ over survivor–dropped pairs of the signed orphaned masks."""
+    total = jax.tree.map(jnp.zeros_like, like)
+    for u in survivors:
+        for j in dropped:
+            a, c = sorted((int(u), int(j)))
+            m = mask_fn(seed, a, c, like)
+            if u == a:
+                total = jax.tree.map(lambda t, x: t + x, total, m)
+            else:
+                total = jax.tree.map(lambda t, x: t - x, total, m)
+    return total
+
+
+def dropout_mask_correction(
+    survivors: Sequence[int], dropped: Sequence[int], seed: int, like: Fed3RStats
+) -> Fed3RStats:
+    """Float orphan-mask total stuck in the survivors' masked sum."""
+    if set(survivors) & set(dropped):
+        raise ValueError("survivors and dropped must be disjoint")
+    return _orphan_total(survivors, dropped, seed, like, _pair_mask)
+
+
+def recover_survivor_sum(
+    masked_sum: Fed3RStats,
+    survivors: Sequence[int],
+    dropped: Sequence[int],
+    seed: int,
+) -> Fed3RStats:
+    """Survivor aggregate after dropout: masked sum minus the orphan total.
+
+    Float masks cancel to fp tolerance (the ~10× mask magnitude bounds the
+    relative error near the fp32 epsilon); use the quantized variant when
+    bit-exactness is required.
+    """
+    corr = dropout_mask_correction(survivors, dropped, seed, masked_sum)
+    return jax.tree.map(lambda a, c: a - c, masked_sum, corr)
+
+
+def dropout_mask_correction_quantized(
+    survivors: Sequence[int], dropped: Sequence[int], seed: int, like: Any
+) -> Any:
+    """Integer orphan-mask total (int32 leaves, mod-2³² arithmetic)."""
+    if set(survivors) & set(dropped):
+        raise ValueError("survivors and dropped must be disjoint")
+    leaves = jax.tree.leaves(like)
+    if any(leaf.dtype != jnp.int32 for leaf in leaves):
+        raise TypeError(
+            "quantized dropout correction expects int32 payload leaves; got "
+            f"{[str(leaf.dtype) for leaf in leaves]}"
+        )
+    return _orphan_total(survivors, dropped, seed, like, _pair_mask_int)
+
+
+def recover_survivor_sum_quantized(
+    masked_sum: Any,
+    survivors: Sequence[int],
+    dropped: Sequence[int],
+    seed: int,
+) -> Any:
+    """Survivor aggregate after dropout in the mod-2³² ring — BIT-EXACT.
+
+    The wrapped subtraction inverts the wrapped additions exactly (integer
+    addition mod 2³² is a group), so the recovered sum equals the unmasked
+    survivor sum bit for bit, for ANY 1..K-1 dropped clients — a dropped
+    client can never poison the aggregate.
+    """
+    corr = dropout_mask_correction_quantized(survivors, dropped, seed, masked_sum)
+    return jax.tree.map(lambda a, c: a - c, masked_sum, corr)

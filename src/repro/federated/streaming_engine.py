@@ -151,6 +151,9 @@ class StreamingEngine(DistDispatchMixin):
             out_specs=(replicated(), replicated()),
         )
         self._refresh = jax.jit(self._refresh_impl)
+        # absorb_stats rejects dist-owned meshes (pre-reduced inputs would
+        # broadcast-then-psum); plain jit keeps mesh-mode construction valid
+        self._absorb_stats = jax.jit(self._absorb_stats_impl)
 
     def init(self, d: int) -> StreamState:
         fac = fed3r.init_factored(d, self.cfg.n_classes, self.cfg.ridge_lambda)
@@ -279,6 +282,38 @@ class StreamingEngine(DistDispatchMixin):
         state, outs = jax.lax.scan(body, state, (inputs, labels, mask))
         return state, WaveTrace(*outs)
 
+    def _absorb_stats_impl(
+        self, state: StreamState, A: jax.Array, b: jax.Array, n: jax.Array
+    ) -> StreamState:
+        """Fold ALREADY-REDUCED statistics (ΣA_k, Σb_k, Σn_k) of one round.
+
+        The round-level entry the asynchronous engine's retire shares
+        (:meth:`repro.federated.async_engine.AsyncRoundEngine.retire_fold`):
+        same all-reduce placement, same Gram reconstruction, same solve —
+        under the ``merge`` backend and fp32 wire the two fold chains are
+        BITWISE identical, which is what lets the async engine's drained W
+        be cross-checked against a streaming replay of its retire sums.
+        Always refreshes W (a retire is a serving point, not a wave).
+        """
+        S_A, S_b, S_n = self.dist.all_reduce((A, b, n), wire_fn=self._wire_fn())
+        G = state.L @ state.L.T + S_A
+        if self.wire.kind in ("int8", "fp8"):
+            L = compress.psd_cholesky(
+                G, compress.quant_spectral_bound(S_A, self.wire)
+            )
+        else:
+            L = jnp.linalg.cholesky(G)
+        b_new = state.b + S_b
+        return StreamState(
+            L=L,
+            b=b_new,
+            n=state.n + S_n,
+            W=self._solve(L, b_new),
+            wave=state.wave + 1,
+            stale_waves=jnp.zeros((), jnp.int32),
+            stale_samples=jnp.zeros((), jnp.float32),
+        )
+
     def _refresh_impl(self, state: StreamState) -> StreamState:
         return state._replace(
             W=self._solve(state.L, state.b),
@@ -303,6 +338,32 @@ class StreamingEngine(DistDispatchMixin):
             jnp.asarray(packed.labels),
             jnp.asarray(packed.mask),
             params,
+        )
+
+    def absorb_stats(
+        self, state: StreamState, A: jax.Array, b: jax.Array, n: jax.Array
+    ) -> StreamState:
+        """Fold one round's pre-reduced (ΣA_k, Σb_k, Σn_k) in ONE dispatch.
+
+        The integration point for round-granular producers (the async
+        engine's retires, a batch statistics engine's cohort sums): no
+        packing, no per-sample features — the statistics land directly in
+        the carried factor and W refreshes.  Under ``psum`` the arguments
+        are each shard's LOCAL partials and the call belongs inside an
+        external shard_map over the pure ``_absorb_stats_impl`` core; a
+        dist-owned mesh would broadcast-then-psum (overcounting), so it is
+        rejected here.
+        """
+        if self.cfg.dist.mesh is not None:
+            raise ValueError(
+                "absorb_stats takes pre-reduced statistics; under a "
+                "dist-owned mesh use absorb(), or shard_map the "
+                "_absorb_stats_impl core over per-device partials"
+            )
+        self.dist.dispatch()
+        return self._absorb_stats(
+            state, jnp.asarray(A), jnp.asarray(b),
+            jnp.asarray(n, dtype=jnp.float32),
         )
 
     def refresh(self, state: StreamState) -> StreamState:

@@ -24,9 +24,21 @@ state's lag while queries see a tick-fresh head).  ``--engine lru``
 (default) is the legacy synchronous driver.  Same log/report shape either
 way.
 
+``--engine async`` serves over ASYNCHRONOUS merge-on-arrival rounds
+(:mod:`repro.federated.async_engine`): per round a cohort (~``--rate``
+clients, sampled from the health tracker's currently-eligible set) uploads
+through a seeded chaos schedule (duplicates deduped, reordered and delayed
+arrivals folding late under the staleness bound), rounds close at their
+deadline instead of waiting for stragglers, and query bursts are answered
+by the LIVE classifier — retired state plus every open partial cohort.
+The staleness columns report open (unretired) rounds and the samples
+sitting in their slots; the final report carries the chaos counters.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_stream --waves 24 --rate 4 \
       --policy every-k --k 4 --segment 6 --engine slots
+  PYTHONPATH=src python -m repro.launch.serve_stream --waves 20 --rate 6 \
+      --segment 5 --engine async
 """
 from __future__ import annotations
 
@@ -66,9 +78,11 @@ def serve_stream(
 
     ``engine="lru"`` is the legacy synchronous driver; ``engine="slots"``
     rides the continuous-batching slot engine (absorb/serve stages, one
-    dispatch each) behind the same log shape.
+    dispatch each) behind the same log shape; ``engine="async"`` serves
+    the live classifier of the merge-on-arrival round engine under a
+    seeded chaos arrival schedule.
     """
-    if engine not in ("lru", "slots"):
+    if engine not in ("lru", "slots", "async"):
         raise ValueError(f"unknown serving engine: {engine!r}")
     # noise calibrated so the served accuracy GROWS over the stream —
     # stale refreshes are then visible in the query-burst numbers
@@ -76,6 +90,13 @@ def serve_stream(
         seed=seed, n=8000, d=d, n_classes=n_classes, n_clients=n_clients,
         alpha=0.1, noise=7.0,
     )
+    if engine == "async":
+        return _serve_async(
+            fed, jnp.asarray(test.features), jnp.asarray(test.labels),
+            n_rounds=n_waves, rate=rate, segment=segment, d=d,
+            n_classes=n_classes, ridge_lambda=ridge_lambda, seed=seed,
+            verbose=verbose,
+        )
     if skew > 0.0:
         schedule = skewed_schedule(
             dominant_labels(fed), n_waves, skew=skew, seed=seed
@@ -183,6 +204,96 @@ def serve_stream(
     return log
 
 
+def _serve_async(
+    fed, test_x, test_y, *, n_rounds, rate, segment, d, n_classes,
+    ridge_lambda, seed, verbose,
+) -> dict:
+    """The ``--engine async`` loop: chaos-injected merge-on-arrival rounds
+    with query bursts served from the LIVE classifier between segments."""
+    import time as _time
+
+    from repro.federated.arrivals import (
+        ChaosSpec,
+        chaos_round_events,
+        latency_profile,
+    )
+    from repro.federated.async_engine import (
+        AsyncConfig,
+        AsyncRoundEngine,
+        client_payloads,
+    )
+
+    t0 = _time.time()
+    per_round = max(1, int(round(rate)))
+    eng = AsyncRoundEngine(AsyncConfig(
+        n_classes=n_classes, ridge_lambda=ridge_lambda, cohort=per_round,
+        deadline=1.0, staleness_rounds=1,
+    ))
+    state = eng.init(d)
+    payloads = client_payloads(fed, n_classes)
+    latency = latency_profile(fed.n_clients, 0.2, seed=seed)
+    spec = ChaosSpec(duplicate=0.05, reorder=0.2, delay=0.1, seed=seed)
+    log: dict = {
+        "wave": [], "clients_seen": [], "samples_seen": [],
+        "stale_waves": [], "stale_samples": [], "acc_served": [],
+        "served_head": "global", "engine": "async",
+    }
+    seen = 0
+    if verbose:
+        print(f"engine=async rounds={n_rounds} cohort~{per_round} "
+              f"deadline={eng.cfg.deadline} staleness={eng.cfg.staleness_rounds}")
+        print("round | arrived | samples retired | open (rounds/samples) | acc(live W)")
+    for lo in range(0, n_rounds, segment):
+        for r in range(lo, min(lo + segment, n_rounds)):
+            eligible = [
+                c for c in range(fed.n_clients) if eng.health.is_eligible(c, r)
+            ]
+            rng = np.random.default_rng((seed, r, 0xA51))
+            take = min(per_round, len(eligible))
+            cohort = sorted(
+                int(eligible[i])
+                for i in rng.choice(len(eligible), size=take, replace=False)
+            )
+            eng.begin_round(r, cohort, float(r))
+            events = chaos_round_events(cohort, latency, spec, r)
+            on_time = [e for e in events if e.t <= eng.cfg.deadline]
+            late = [e for e in events if e.t > eng.cfg.deadline]
+            for ev in sorted(on_time):
+                state, _ = eng.deliver(state, ev, payloads[ev.client],
+                                       now=float(r) + ev.t)
+            state = eng.close_round(state, r, now=float(r) + eng.cfg.deadline)
+            # stragglers past the deadline keep merging (staleness bound)
+            for ev in sorted(late):
+                state, _ = eng.deliver(state, ev, payloads[ev.client],
+                                       now=float(r) + ev.t)
+            seen += len(cohort)
+        acc = float(fed3r.accuracy(eng.live_classifier(state), test_x, test_y))
+        open_rounds = eng._next_begin - eng._next_retire
+        open_samples = float(jnp.sum(state.n_slots))
+        log["wave"].append(eng._next_begin)
+        log["clients_seen"].append(seen)
+        log["samples_seen"].append(float(state.n))
+        log["stale_waves"].append(open_rounds)
+        log["stale_samples"].append(open_samples)
+        log["acc_served"].append(acc)
+        if verbose:
+            print(f"{eng._next_begin:5d} | {seen:7d} | {float(state.n):15.0f} | "
+                  f"{open_rounds:5d} /{open_samples:8.0f} | {acc:.4f}")
+    state = eng.drain(state)
+    acc = float(fed3r.accuracy(eng.classifier(state), test_x, test_y))
+    log["acc_final"] = acc
+    log["dispatches"] = eng.dispatches
+    log["chaos"] = eng.report()
+    log["wall_s"] = _time.time() - t0
+    if verbose:
+        rep = log["chaos"]
+        print(f"final drain: acc={acc:.4f}  ({eng.dispatches} dispatches; "
+              f"folded={rep['folded']} late={rep['late_folds']} "
+              f"dup={rep['duplicates']} stale={rep['stale_rejected']} "
+              f"dropped={rep['dropped_uploads']}, {log['wall_s']:.2f}s)")
+    return log
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--waves", type=int, default=24)
@@ -197,8 +308,10 @@ def main() -> None:
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--classes", type=int, default=10)
     ap.add_argument("--ridge-lambda", type=float, default=1e-2)
-    ap.add_argument("--engine", choices=("lru", "slots"), default="lru",
-                    help="legacy synchronous driver vs slot-serving engine")
+    ap.add_argument("--engine", choices=("lru", "slots", "async"),
+                    default="lru",
+                    help="legacy synchronous driver, slot-serving engine, "
+                         "or chaos-injected async merge-on-arrival rounds")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve_stream(

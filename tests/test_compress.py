@@ -169,10 +169,34 @@ def test_sketch_exact_on_low_rank(rng):
 
 def test_fp8_fallback_warns(monkeypatch):
     monkeypatch.setattr(compress, "fp8_supported", lambda: False)
+    compress._warn_fp8_fallback.cache_clear()
     with pytest.warns(RuntimeWarning, match="falling back to int8"):
         resolved = WireFormat(kind="fp8").resolved()
     assert resolved.kind == "int8"
     assert resolved.tile == WireFormat(kind="fp8").tile
+
+
+def test_fp8_fallback_warns_once_per_process(monkeypatch, recwarn):
+    """Regression: every engine construction used to re-emit the fallback
+    warning; it must fire exactly once per process no matter how many
+    WireFormats resolve (the backend's fp8 support cannot change)."""
+    monkeypatch.setattr(compress, "fp8_supported", lambda: False)
+    compress._warn_fp8_fallback.cache_clear()
+    try:
+        for _ in range(5):
+            assert WireFormat(kind="fp8").resolved().kind == "int8"
+        # engines resolve at construction too — still no second warning
+        StreamingEngine(StreamConfig(
+            n_classes=C, ridge_lambda=1e-2, wire=WireFormat(kind="fp8"),
+        ))
+        fallback = [
+            w for w in recwarn.list
+            if issubclass(w.category, RuntimeWarning)
+            and "falling back to int8" in str(w.message)
+        ]
+        assert len(fallback) == 1
+    finally:
+        compress._warn_fp8_fallback.cache_clear()
 
 
 @pytest.mark.skipif(not compress.fp8_supported(), reason="backend lacks fp8")
