@@ -3,14 +3,120 @@
 Reproduces the paper's cost accounting at PAPER scale (MobileNetV2 d=1280,
 Landmarks C=2028 / iNaturalist C=1203, FP32) — these are exact analytic
 quantities, so the reproduction is exact, not directional.
+
+The tail section meters the model against REALITY: actual quantized-array
+bytes vs ``stats_wire_bytes``, XLA ``cost_analysis`` FLOPs vs the analytic
+solve/serve counts, and the committed serving-bench QPS vs the roofline
+ceiling.  Each delta lands as a ``cost_model_drift`` telemetry gauge and
+prints a WARNING line when measured/model leaves [0.5, 2.0]x — the early
+tripwire for the cost model silently drifting away from the code it prices.
 """
 from __future__ import annotations
 
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+import numpy as np
+
 from benchmarks.common import emit
-from repro.federated.costs import INATURALIST, LANDMARKS
+from repro.federated.compress import sketch_psd
+from repro.federated.costs import INATURALIST, LANDMARKS, CostModel
+from repro.federated.telemetry import get_telemetry
+from repro.kernels.ref import quantize_tiles_ref
 
 ALGS = ("fedavg", "fedavgm", "scaffold", "fedavg-lp", "scaffold-lp",
         "fed3r", "fed3r-rf", "fed3r-personalized", "personalized-ft")
+
+
+def _drift(name: str, measured: float, model: float,
+           warn_low: bool = True, note: str = "") -> None:
+    """One measured-vs-CostModel meter: gauge + WARNING outside [0.5, 2.0]x.
+
+    ``warn_low=False`` silences the under-count direction for meters where
+    the measurement is a known lower bound (XLA ``cost_analysis`` omits
+    custom-call FLOPs, so library Cholesky/triangular solves read low).
+    """
+    ratio = measured / model if model else float("inf")
+    get_telemetry().gauge("cost_model_drift", meter=name).set(ratio)
+    flag = ""
+    if ratio > 2.0 or (warn_low and ratio < 0.5):
+        flag = " WARNING_gt2x_drift"
+        print(f"# WARNING drift_{name}: measured/model = {ratio:.3f}x "
+              f"(outside [0.5, 2.0])", flush=True)
+    extra = f" note={note}" if note else ""
+    emit(f"drift_{name}", 0.0,
+         f"measured={measured:.4e} model={model:.4e} "
+         f"ratio={ratio:.3f}x{flag}{extra}")
+
+
+def _xla_flops(fn, *xs) -> float | None:
+    """FLOPs XLA attributes to the compiled fn, or None when unavailable."""
+    try:
+        c = jax.jit(fn).lower(*xs).compile().cost_analysis()
+        if isinstance(c, list):
+            c = c[0]
+        f = c.get("flops")
+        return None if f is None else float(f)
+    except Exception:  # noqa: BLE001 — cost_analysis is backend-best-effort
+        return None
+
+
+def measured_vs_model() -> None:
+    """Meter the CostModel against real arrays, XLA, and the committed bench."""
+    d, C, tile, rank, q = 256, 64, 128, 16, 1024
+    cm = CostModel(b=0.0, d=d, C=C)
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((2 * d, d)).astype(np.float32)
+    A = jnp.asarray(X.T @ X)  # a real PSD second moment
+    b = jnp.asarray(rng.standard_normal((d, C)).astype(np.float32))
+
+    # wire bytes: the bytes that actually cross the uplink per format
+    _drift("wire_fp32_bytes", A.nbytes + b.nbytes,
+           cm.compressed_stats_bytes("fp32", tile=tile, rank=rank))
+    qa, sa = quantize_tiles_ref(A, tile=tile)
+    qb, sb = quantize_tiles_ref(b, tile=tile)
+    _drift("wire_int8_bytes", qa.nbytes + sa.nbytes + qb.nbytes + sb.nbytes,
+           cm.compressed_stats_bytes("int8", tile=tile, rank=rank))
+    Z = sketch_psd(A, rank)
+    _drift("wire_sketch_bytes", Z.nbytes + b.nbytes,
+           cm.compressed_stats_bytes("sketch", tile=tile, rank=rank))
+
+    # serve/solve FLOPs: what XLA prices the compiled stages at
+    xs = jnp.ones((q, d), jnp.float32)
+    W = jnp.ones((d, C), jnp.float32)
+    f_serve = _xla_flops(lambda x, w: x @ w, xs, W)
+    if f_serve is not None:
+        _drift("serve_flops", f_serve, cm.serve_flops(q))
+    f_solve = _xla_flops(
+        lambda a, rhs: jsl.cho_solve(jsl.cho_factor(a, lower=True), rhs),
+        A + d * jnp.eye(d), b,
+    )
+    if f_solve is not None:
+        _drift("solve_flops", f_solve, d**3 / 3.0 + 2.0 * d * d * C,
+               warn_low=False, note="xla_omits_custom_call_flops")
+
+    # QPS roofline: committed serving bench vs the model's chip ceiling —
+    # a FRACTION of the ceiling is expected; above 1.0 the model is wrong
+    base = os.path.join(os.path.dirname(__file__), "baselines",
+                        "BENCH_serving.json")
+    if os.path.exists(base):
+        with open(base) as f:
+            bench = json.load(f)
+        cm_bench = CostModel(b=0.0, d=64, C=10)  # bench_serving full scale
+        roof = cm_bench.serving_qps_roofline()["qps"]
+        frac = float(bench["slots_qps"]) / roof
+        get_telemetry().gauge("serving_qps_roofline_fraction").set(frac)
+        flag = ""
+        if frac > 1.0:
+            flag = " WARNING_above_roofline"
+            print(f"# WARNING serving qps above model roofline: "
+                  f"{frac:.3f}x", flush=True)
+        emit("drift_serving_qps_roofline", 0.0,
+             f"bench_qps={bench['slots_qps']:.3e} roofline_qps={roof:.3e} "
+             f"fraction={frac:.4f}{flag}")
 
 
 def main() -> list:
@@ -116,6 +222,7 @@ def main() -> list:
             f"payload_mb={ar8['payload_bytes'] / 1e6:.1f} "
             f"ici_us={ar8['ici_s'] * 1e6:.1f} dcn_us={ar8['dcn_s'] * 1e6:.1f}",
         )
+    measured_vs_model()
     return rows
 
 

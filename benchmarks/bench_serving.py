@@ -109,7 +109,7 @@ def _replay(server, trace, chunks, xs_bursts, burst, coalesce=1):
     """
     lat: list = []
     a = 0
-    t_start = time.time()
+    t_start = time.perf_counter()
     n = len(xs_bursts)
     for bidx in range(n):
         if a < len(chunks):
@@ -117,17 +117,17 @@ def _replay(server, trace, chunks, xs_bursts, burst, coalesce=1):
             a += 1
         cids = trace[bidx * burst:(bidx + 1) * burst]
         if coalesce == 1:
-            t0 = time.time()
+            t0 = time.perf_counter()
             scores, _ = server.query(cids, xs_bursts[bidx])
             jax.block_until_ready(scores)
-            lat.extend([time.time() - t0] * burst)
+            lat.extend([time.perf_counter() - t0] * burst)
         else:
             server.enqueue(cids, xs_bursts[bidx])
             if (bidx + 1) % coalesce == 0 or bidx == n - 1:
                 scores, rep = server.tick()
                 jax.block_until_ready(scores)
                 lat.extend(rep["latency_s"])
-    return np.asarray(lat), time.time() - t_start
+    return np.asarray(lat), time.perf_counter() - t_start
 
 
 def _make_slots(fed, universe, cfg, n_slots, invalidation="segmented"):

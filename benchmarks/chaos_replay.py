@@ -11,7 +11,10 @@ engine AND the synchronous barrier over the SAME timeline and asserts:
 
 On any divergence the offending schedule is persisted as JSON under
 ``chaos_failures/`` (uploaded as a CI artifact) and the process exits 1; the
-schedule can then be rerun offline with ``--replay <file>``.
+schedule can then be rerun offline with ``--replay <file>``.  Alongside the
+schedule, the run is replayed once more under a fresh flight recorder and
+the full structured event stream (fault injections, staleness drops, health
+transitions) is written as ``<name>.events.jsonl`` — the post-mortem log.
 
 Usage:
     PYTHONPATH=src:. python benchmarks/chaos_replay.py            # all 8 gates
@@ -41,6 +44,7 @@ from repro.federated.async_engine import (
     run_chaos_timeline,
 )
 from repro.data.pipeline import make_federated_features
+from repro.federated.telemetry import Telemetry, set_telemetry
 
 D_FEAT = 32
 N_CLASSES = 8
@@ -171,7 +175,18 @@ def main() -> int:
             out.mkdir(parents=True, exist_ok=True)
             path = out / f"{name}.json"
             path.write_text(timeline_to_json(cohorts, latency, spec, events))
-            print(f"      schedule persisted to {path}")
+            # replay under a fresh flight recorder so the artifact carries
+            # the full fault-injection + engine event stream for post-mortem
+            telemetry = Telemetry(ring=65536)
+            prev = set_telemetry(telemetry)
+            try:
+                chaos_timeline(cohorts, latency, spec)
+                check_schedule(name, cohorts, events, payloads)
+            finally:
+                set_telemetry(prev)
+            log_path = out / f"{name}.events.jsonl"
+            log_path.write_text(telemetry.events_jsonl())
+            print(f"      schedule persisted to {path} (events: {log_path})")
     if failures:
         print(f"{failures} schedule(s) diverged")
         return 1

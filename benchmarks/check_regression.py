@@ -24,6 +24,12 @@ emitting a dict — no per-benchmark code here:
   drifted smoke config silently invalidates every other comparison, so
   it must come with a re-seeded baseline).
 
+Dispatch counts are preferentially read from the ``telemetry_<name>.json``
+registry snapshot ``run.py`` writes next to each BENCH record (summed per
+engine label, mirroring ``repro.federated.telemetry.dispatch_summary``);
+when the snapshot is absent the legacy in-dict ``*dispatch*`` fields gate
+alone, so old records remain comparable.
+
 Usage:
   python benchmarks/check_regression.py            # after run.py --smoke
   python benchmarks/check_regression.py --baseline-dir benchmarks/baselines
@@ -49,6 +55,20 @@ def flatten(d: dict, prefix: str = "") -> Dict[str, object]:
             out.update(flatten(v, prefix=f"{key}."))
         else:
             out[key] = v
+    return out
+
+
+def telemetry_dispatches(snapshot: dict) -> Dict[str, int]:
+    """Per-engine dispatch totals from a telemetry snapshot (pure JSON).
+
+    Local mirror of ``repro.federated.telemetry.dispatch_summary`` so the
+    gate runs without ``src`` on ``PYTHONPATH``.
+    """
+    out: Dict[str, int] = {}
+    for c in snapshot.get("counters", []):
+        if c.get("name") == "engine_dispatches_total":
+            eng = c.get("labels", {}).get("engine", "engine")
+            out[eng] = out.get(eng, 0) + int(c.get("value", 0))
     return out
 
 
@@ -140,6 +160,14 @@ def main() -> int:
             baseline = json.load(f)
         with open(cur_path) as f:
             current = json.load(f)
+        # prefer the registry snapshot for dispatch counts; fall back to
+        # whatever legacy fields the BENCH dict itself carries
+        suffix = name[len("BENCH_") : -len(".json")]
+        snap_path = os.path.join(args.current_dir, f"telemetry_{suffix}.json")
+        if os.path.exists(snap_path):
+            with open(snap_path) as f:
+                snap = json.load(f)
+            current["telemetry"] = {"dispatches": telemetry_dispatches(snap)}
         violations.extend(
             compare(
                 current,

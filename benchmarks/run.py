@@ -25,7 +25,10 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to paper artifacts:
 Modules listed in ``JSON_OUT`` additionally persist their result dict as a
 ``BENCH_<name>.json`` next to the invocation — the perf trajectory record
 that ``benchmarks/check_regression.py`` gates CI against (baselines live
-in ``benchmarks/baselines/``).
+in ``benchmarks/baselines/``).  Each JSON_OUT module runs under a fresh
+``Telemetry`` registry whose snapshot is persisted alongside as
+``telemetry_<name>.json`` (a CI artifact); the per-engine dispatch totals
+from that snapshot are folded into the BENCH dict under ``telemetry``.
 
 Usage: PYTHONPATH=src:. python benchmarks/run.py [--smoke] [names ...]
 """
@@ -36,6 +39,8 @@ import inspect
 import json
 import time
 import traceback
+
+from repro.federated.telemetry import Telemetry, dispatch_summary, set_telemetry
 
 MODULES = [
     "bench_costs",
@@ -85,6 +90,12 @@ def main() -> None:
         if only and name not in only:
             continue
         t0 = time.time()
+        telemetry = None
+        if name in JSON_OUT:
+            # fresh registry per bench: the snapshot is that bench's own
+            # dispatch/span record, unpolluted by earlier modules
+            telemetry = Telemetry()
+            set_telemetry(telemetry)
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
             kwargs = {}
@@ -92,8 +103,12 @@ def main() -> None:
                 kwargs["smoke"] = True
             result = mod.main(**kwargs)
             if name in JSON_OUT and isinstance(result, dict):
+                snap = telemetry.snapshot()
+                result["telemetry"] = {"dispatches": dispatch_summary(snap)}
                 with open(f"BENCH_{JSON_OUT[name]}.json", "w") as f:
                     json.dump(result, f, indent=2, default=float)
+                with open(f"telemetry_{JSON_OUT[name]}.json", "w") as f:
+                    json.dump(snap, f, indent=2, default=float)
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception as e:  # noqa: BLE001 — keep the harness running
             failures.append(name)

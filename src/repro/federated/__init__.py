@@ -7,6 +7,11 @@ from repro.federated.algorithms import (  # noqa: F401
     server_optimizer_step,
     server_state_from_tree,
 )
+from repro.federated.telemetry import (  # noqa: F401
+    Telemetry,
+    get_telemetry,
+    set_telemetry,
+)
 from repro.federated.dist import (  # noqa: F401
     DistConfig,
     DistContext,

@@ -48,6 +48,7 @@ from repro.data.pipeline import (
     PackedArrivals,
     pack_arrival_waves,
 )
+from repro.federated.telemetry import get_telemetry
 
 Schedule = List[List[int]]
 
@@ -276,22 +277,37 @@ def chaos_round_events(
 
     Deterministic in ``(spec.seed, round_id, client)`` — re-generating a
     round replays byte-identical faults, which is what lets the chaos CI
-    gate persist an offending schedule and replay it.
+    gate persist an offending schedule and replay it.  Each injected
+    fault (delay, drop+retransmit, reorder, duplicate) is additionally
+    recorded as a ``chaos_fault`` event in the telemetry flight recorder,
+    so a failed replay ships an event log alongside the schedule JSON.
     """
+    telemetry = get_telemetry()
+
+    def fault(kind: str, c: int, **fields) -> None:
+        telemetry.event(
+            "chaos_fault", fault=kind, client=int(c), round=int(round_id), **fields
+        )
+
     events: List[UploadEvent] = []
     for c in cohort:
         rng = np.random.default_rng((spec.seed, round_id, int(c), 0xC4A0))
         base = float(latency[int(c)])
         if rng.random() < spec.delay:
             base *= spec.delay_factor
+            fault("delay", c, factor=spec.delay_factor)
         attempt = 0
         while attempt < spec.max_attempts - 1 and rng.random() < spec.drop:
             attempt += 1  # this copy was lost; retransmit after rto
+        if attempt:
+            fault("drop", c, retransmits=attempt)
         t = base + attempt * spec.rto
         if rng.random() < spec.reorder:
             t = max(1e-6, t + rng.uniform(-spec.rto, spec.rto))
+            fault("reorder", c)
         events.append(UploadEvent(t=t, round_id=round_id, client=int(c), attempt=attempt))
         if rng.random() < spec.duplicate:
+            fault("duplicate", c)
             events.append(
                 UploadEvent(
                     t=t + rng.uniform(1e-6, spec.rto),

@@ -74,6 +74,7 @@ from repro.federated import compress, secure_agg
 from repro.federated.arrivals import ChaosSpec, UploadEvent, chaos_round_events
 from repro.federated.compress import IntPayload, WireFormat
 from repro.federated.dist import DistConfig, DistContext, DistDispatchMixin
+from repro.federated.telemetry import Telemetry, get_telemetry
 
 
 @dataclass(frozen=True)
@@ -134,23 +135,42 @@ class ClientHealth:
     cohort sampling for ``cooldown`` rounds, then re-admitted on probation.
     One on-time delivery fully restores it (misses reset, demotion
     cleared): slow clients stop stalling rounds, recovered clients rejoin.
+
+    Every transition lands in the telemetry flight recorder
+    (``client_demoted`` with the probation round, ``client_readmitted``),
+    so a failed chaos replay ships a replayable event log.
     """
 
-    def __init__(self, demote_after: int = 2, cooldown: int = 2):
+    def __init__(
+        self,
+        demote_after: int = 2,
+        cooldown: int = 2,
+        telemetry: Optional[Telemetry] = None,
+    ):
         self.demote_after = demote_after
         self.cooldown = cooldown
         self.misses: Dict[int, int] = {}
         self.demoted_at: Dict[int, int] = {}
+        self.telemetry = get_telemetry() if telemetry is None else telemetry
 
     def on_time(self, client: int) -> None:
         """An on-time delivery: full recovery (re-admission on probation)."""
         self.misses[client] = 0
-        self.demoted_at.pop(client, None)
+        if self.demoted_at.pop(client, None) is not None:
+            self.telemetry.event("client_readmitted", client=int(client))
 
     def missed(self, client: int, round_id: int) -> None:
         """A blown round deadline; demote at the configured miss count."""
         self.misses[client] = self.misses.get(client, 0) + 1
         if self.misses[client] >= self.demote_after:
+            if client not in self.demoted_at:
+                self.telemetry.event(
+                    "client_demoted",
+                    client=int(client),
+                    round=int(round_id),
+                    misses=int(self.misses[client]),
+                    probation_round=int(round_id) + self.cooldown,
+                )
             self.demoted_at[client] = round_id
 
     def is_eligible(self, client: int, round_id: int) -> bool:
@@ -213,22 +233,50 @@ class AsyncRoundEngine(DistDispatchMixin):
             raise ValueError("secure mode and psum aggregation are exclusive")
         self.cfg = cfg
         self.wire = cfg.wire.resolved()
-        self.dist = DistContext(cfg.dist)
-        self.health = ClientHealth(cfg.demote_after, cfg.cooldown)
+        self.dist = DistContext(cfg.dist, engine="async")
+        self.telemetry = self.dist.telemetry
+        self.health = ClientHealth(
+            cfg.demote_after, cfg.cooldown, telemetry=self.telemetry
+        )
         self._rounds: Dict[int, _RoundMeta] = {}
         self._next_begin = 0
         self._next_retire = 0
-        # fault/robustness counters (the chaos report)
-        self.folded = 0
-        self.duplicates = 0
-        self.stale_rejected = 0
-        self.late_folds = 0
-        self.dropped_uploads = 0
+        # fault/robustness counters (the chaos report) — homed in the
+        # telemetry registry, one labeled cell per engine instance
+        inst = self.telemetry.next_instance("async")
+        self._fault_counters = {
+            k: self.telemetry.counter(f"async_{k}_total", inst=inst)
+            for k in (
+                "folded",
+                "duplicates",
+                "stale_rejected",
+                "late_folds",
+                "dropped_uploads",
+            )
+        }
         donate = self.dist.cfg.donate
         self._scatter = self.dist.jit(self._scatter_impl, donate=donate)
         self._retire = self.dist.jit(self._retire_impl, donate=donate)
         self._retire_secure = self.dist.jit(self._retire_secure_impl, donate=donate)
         self._live = self.dist.jit(self._live_impl, donate=False)
+
+    # fault/robustness counters proxied onto their telemetry cells (the
+    # ``+=`` call sites and the chaos report keep working unchanged)
+    def _fault_count(name: str):  # noqa: N805 — descriptor factory, not a method
+        def _get(self) -> int:
+            return int(self._fault_counters[name].value)
+
+        def _set(self, value: int) -> None:
+            self._fault_counters[name].set(int(value))
+
+        return property(_get, _set)
+
+    folded = _fault_count("folded")
+    duplicates = _fault_count("duplicates")
+    stale_rejected = _fault_count("stale_rejected")
+    late_folds = _fault_count("late_folds")
+    dropped_uploads = _fault_count("dropped_uploads")
+    del _fault_count
 
     # ---- device programs ---------------------------------------------------
 
@@ -390,6 +438,7 @@ class AsyncRoundEngine(DistDispatchMixin):
         r, c = ev.round_id, ev.client
         if r < self._next_retire:
             self.stale_rejected += 1
+            self.telemetry.event("staleness_drop", client=int(c), round=int(r))
             return state, "stale"
         meta = self._rounds.get(r)
         if meta is None:
@@ -407,8 +456,9 @@ class AsyncRoundEngine(DistDispatchMixin):
             n = getattr(payload, "n", jnp.zeros((), jnp.float32))
         else:
             A, b, n = payload.A, payload.b, payload.n
-        self.dist.dispatch()
-        state = self._scatter(state, ring, slot, A, b, n)
+        with self.telemetry.span("fold", engine="async"):
+            self.dist.dispatch()
+            state = self._scatter(state, ring, slot, A, b, n)
         if meta.closed:
             self.late_folds += 1
             return state, "late"
@@ -443,29 +493,40 @@ class AsyncRoundEngine(DistDispatchMixin):
         return state
 
     def _retire_round(self, state: AsyncState, r: int) -> AsyncState:
-        meta = self._rounds[r]
-        missing = [c for c in meta.cohort if c not in meta.arrived]
-        self.dropped_uploads += len(missing)
-        ring = np.int32(r % self.ring_size)
-        self.dist.dispatch()
-        if self.cfg.secure:
-            like = IntPayload(
-                qA=jnp.zeros(state.A_slots.shape[2:], jnp.int32),
-                qb=jnp.zeros(state.b_slots.shape[2:], jnp.int32),
-            )
-            survivors = sorted(meta.arrived)
+        with self.telemetry.span("retire", engine="async"):
+            meta = self._rounds[r]
+            missing = [c for c in meta.cohort if c not in meta.arrived]
+            self.dropped_uploads += len(missing)
             if missing:
-                corr = secure_agg.dropout_mask_correction_quantized(
-                    survivors, missing, self.cfg.secure_seed + r, like
+                self.telemetry.event(
+                    "upload_dropped", round=int(r), clients=[int(c) for c in missing]
                 )
+            ring = np.int32(r % self.ring_size)
+            self.dist.dispatch()
+            if self.cfg.secure:
+                like = IntPayload(
+                    qA=jnp.zeros(state.A_slots.shape[2:], jnp.int32),
+                    qb=jnp.zeros(state.b_slots.shape[2:], jnp.int32),
+                )
+                survivors = sorted(meta.arrived)
+                if missing:
+                    corr = secure_agg.dropout_mask_correction_quantized(
+                        survivors, missing, self.cfg.secure_seed + r, like
+                    )
+                    self.telemetry.event(
+                        "secure_mask_recovery",
+                        round=int(r),
+                        missing=len(missing),
+                        survivors=len(survivors),
+                    )
+                else:
+                    corr = like
+                sA, sb = meta.scales
+                state = self._retire_secure(state, ring, corr.qA, corr.qb, sA, sb)
             else:
-                corr = like
-            sA, sb = meta.scales
-            state = self._retire_secure(state, ring, corr.qA, corr.qb, sA, sb)
-        else:
-            state = self._retire(state, ring)
-        self._next_retire = r + 1
-        return state
+                state = self._retire(state, ring)
+            self._next_retire = r + 1
+            return state
 
     def drain(self, state: AsyncState) -> AsyncState:
         """Close every open round (in order) and retire everything."""

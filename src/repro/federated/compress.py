@@ -71,6 +71,7 @@ import jax.numpy as jnp
 from repro.core.fed3r import Fed3RStats
 from repro.federated.costs import WIRE_KINDS, stats_wire_bytes
 from repro.federated.dist import resolve_use_kernel
+from repro.federated.telemetry import get_telemetry
 from repro.kernels import dequant_accumulate, quantize_tiles
 from repro.kernels.quant import INT8_QMAX
 from repro.kernels.ref import dequant_acc_ref, quantize_tiles_ref
@@ -145,6 +146,7 @@ class WireFormat:
         hundreds of engines isn't drowned in identical warnings."""
         if self.kind == "fp8" and not fp8_supported():
             _warn_fp8_fallback()
+            get_telemetry().event("fp8_fallback", backend=jax.default_backend())
             return replace(self, kind="int8")
         return self
 
@@ -357,36 +359,85 @@ class UplinkCompressor:
     uploads a client makes (the errors telescope instead of accumulating).
     ``upload`` is ONE jitted dispatch per call; ``bytes_sent`` /
     ``bytes_fp32`` price the wire under the configured format vs today's
-    dense fp32 uplink.
+    dense fp32 uplink — homed in the telemetry registry as
+    ``wire_bytes_*_total`` counters, with a ``wire_cost_model_drift``
+    gauge (bytes actually priced per upload over the ``cost_model``'s
+    prediction) surfacing CostModel staleness the moment the wire formula
+    and the analytic model disagree.
     """
 
-    def __init__(self, fmt: WireFormat, use_kernel: Optional[bool] = None):
+    def __init__(
+        self,
+        fmt: WireFormat,
+        use_kernel: Optional[bool] = None,
+        *,
+        cost_model=None,  # Optional[repro.federated.costs.CostModel]
+        telemetry=None,
+    ):
         self.fmt = fmt.resolved()
         self.use_kernel = use_kernel
+        self.cost_model = cost_model
         self._residuals: Dict[int, EFState] = {}
-        self.uploads = 0
-        self.bytes_sent = 0.0
-        self.bytes_fp32 = 0.0
+        t = self.telemetry = get_telemetry() if telemetry is None else telemetry
+        inst = t.next_instance("uplink")
+        self._c_uploads = t.counter("wire_uploads_total", kind=self.fmt.kind, inst=inst)
+        self._c_sent = t.counter("wire_bytes_sent_total", kind=self.fmt.kind, inst=inst)
+        self._c_fp32 = t.counter("wire_bytes_fp32_total", kind=self.fmt.kind, inst=inst)
+        self._g_ratio = t.gauge("wire_compression_ratio", kind=self.fmt.kind, inst=inst)
+        self._g_drift = t.gauge("wire_cost_model_drift", kind=self.fmt.kind, inst=inst)
         self._fn = jax.jit(
             lambda A, b, eA, eb: compress_stats_ef(
                 A, b, EFState(eA=eA, eb=eb), self.fmt, self.use_kernel
             )
         )
 
+    # wire accounting proxied onto the telemetry cells (``+=`` keeps working)
+    @property
+    def uploads(self) -> int:
+        return int(self._c_uploads.value)
+
+    @uploads.setter
+    def uploads(self, value: int) -> None:
+        self._c_uploads.set(int(value))
+
+    @property
+    def bytes_sent(self) -> float:
+        return float(self._c_sent.value)
+
+    @bytes_sent.setter
+    def bytes_sent(self, value: float) -> None:
+        self._c_sent.set(float(value))
+
+    @property
+    def bytes_fp32(self) -> float:
+        return float(self._c_fp32.value)
+
+    @bytes_fp32.setter
+    def bytes_fp32(self, value: float) -> None:
+        self._c_fp32.set(float(value))
+
     def upload(self, client_id: int, stats: Fed3RStats) -> Fed3RStats:
         """Compress one client upload; returns the stats AS RECEIVED by the
         aggregator (dequantized), advancing the client's residual."""
-        d, C = stats.b.shape
-        ef = self._residuals.get(client_id)
-        if ef is None or not self.fmt.error_feedback:
-            ef = ef_init(d, C)
-        Ah, bh, new_ef = self._fn(stats.A, stats.b, ef.eA, ef.eb)
-        if self.fmt.error_feedback:
-            self._residuals[client_id] = new_ef
-        self.uploads += 1
-        self.bytes_sent += self.fmt.wire_bytes(d, C)
-        self.bytes_fp32 += stats_wire_bytes(d, C, "fp32")
-        return Fed3RStats(A=Ah, b=bh, n=stats.n)
+        with self.telemetry.span("upload", engine="uplink"):
+            d, C = stats.b.shape
+            ef = self._residuals.get(client_id)
+            if ef is None or not self.fmt.error_feedback:
+                ef = ef_init(d, C)
+            Ah, bh, new_ef = self._fn(stats.A, stats.b, ef.eA, ef.eb)
+            if self.fmt.error_feedback:
+                self._residuals[client_id] = new_ef
+            sent = self.fmt.wire_bytes(d, C)
+            self.uploads += 1
+            self.bytes_sent += sent
+            self.bytes_fp32 += stats_wire_bytes(d, C, "fp32")
+            self._g_ratio.set(self.compression_ratio)
+            if self.cost_model is not None:
+                predicted = self.cost_model.compressed_stats_bytes(
+                    self.fmt.kind, tile=self.fmt.tile, rank=self.fmt.rank
+                )
+                self._g_drift.set(sent / predicted if predicted else float("inf"))
+            return Fed3RStats(A=Ah, b=bh, n=stats.n)
 
     @property
     def compression_ratio(self) -> float:

@@ -52,6 +52,7 @@ from typing import Any, Callable, Optional, Tuple
 
 import jax
 
+from repro.federated.telemetry import Telemetry, get_telemetry
 from repro.launch.mesh import data_axes, data_parallel_size
 from repro.sharding.specs import data_parallel_spec
 
@@ -213,19 +214,49 @@ class DistConfig:
 class DistContext:
     """Per-engine handle on the distributed execution layer.
 
-    Owns the host→device dispatch counter every engine used to carry, the
-    aggregation backend (:meth:`all_reduce`), and program construction
-    (:meth:`jit`).  Engines keep their ``.dispatches`` attribute as a
-    property proxying this counter, so benchmarks keep working unchanged.
+    Owns the host→device dispatch counter every engine used to carry —
+    now homed in the unified telemetry registry
+    (:mod:`repro.federated.telemetry`) as the labeled series
+    ``engine_dispatches_total{engine=<name>, inst=<n>}``, one counter
+    cell per context so N same-type engines stay independently
+    resettable — plus the aggregation backend (:meth:`all_reduce`) and
+    program construction (:meth:`jit`).  Engines keep their
+    ``.dispatches`` attribute as a property proxying this counter
+    (:class:`DistDispatchMixin`), so benchmarks keep working unchanged;
+    the CI regression gate reads the SAME cells back out of the
+    ``telemetry_*.json`` snapshots, so the two can't diverge.
     """
 
-    def __init__(self, cfg: DistConfig):
+    def __init__(
+        self,
+        cfg: DistConfig,
+        *,
+        engine: str = "engine",
+        telemetry: Optional[Telemetry] = None,
+    ):
         self.cfg = cfg
-        self.dispatches = 0  # host→device dispatch count (diagnostics/bench)
+        # registry captured at construction (process-global by default,
+        # injectable for tests/benches); spans/events ride the same handle
+        self.telemetry = get_telemetry() if telemetry is None else telemetry
+        inst = self.telemetry.next_instance(f"dist:{engine}")
+        self._dispatches = self.telemetry.counter(
+            "engine_dispatches_total", engine=engine, inst=inst
+        )
+
+    @property
+    def dispatches(self) -> int:
+        """Host→device dispatch count (a telemetry counter cell)."""
+        return int(self._dispatches.value)
+
+    @dispatches.setter
+    def dispatches(self, value: int) -> None:
+        self._dispatches.set(int(value))
 
     def dispatch(self) -> None:
-        """Record one host→device dispatch (call at each host-API entry)."""
-        self.dispatches += 1
+        """Record one host→device dispatch (call at each host-API entry).
+
+        A plain integer add on a telemetry Counter — zero device work."""
+        self._dispatches.inc()
 
     def all_reduce(self, tree: Any, wire_fn: Optional[Callable[[Any], Any]] = None) -> Any:
         """The server aggregation behind one interface: identity under
@@ -282,8 +313,9 @@ class DistContext:
 
 class DistDispatchMixin:
     """The engines' public ``.dispatches`` counter, proxied onto the owned
-    :class:`DistContext` (``self.dist``) — kept settable because the
-    benchmarks reset it between timed sections."""
+    :class:`DistContext` (``self.dist``) — which in turn homes it in the
+    telemetry registry as ``engine_dispatches_total`` — kept settable
+    because the benchmarks reset it between timed sections."""
 
     dist: DistContext
 

@@ -167,7 +167,7 @@ class AccumulationEngine(DistDispatchMixin):
         self.feature_fn = feature_fn
         self.rff_params = rff_params
         self.wire = cfg.wire.resolved()  # fp8 → int8 fallback off-TPU
-        self.dist = DistContext(cfg.dist)
+        self.dist = DistContext(cfg.dist, engine="accumulation")
         # mesh mode: shard the leading (n_shards) axis of the packed arrays
         # over the data axes; accumulator/params replicated; all-reduced
         # output replicated
@@ -248,11 +248,12 @@ class AccumulationEngine(DistDispatchMixin):
         self, acc: EngineStats, packed: PackedClients, params: Any = None
     ) -> EngineStats:
         """Fold a packed client selection into the accumulator (one dispatch)."""
-        self.dist.dispatch()
-        return self._accumulate(
-            acc,
-            jnp.asarray(packed.inputs),
-            jnp.asarray(packed.labels),
-            jnp.asarray(packed.mask),
-            params,
-        )
+        with self.dist.telemetry.span("accumulate", engine="accumulation"):
+            self.dist.dispatch()
+            return self._accumulate(
+                acc,
+                jnp.asarray(packed.inputs),
+                jnp.asarray(packed.labels),
+                jnp.asarray(packed.mask),
+                params,
+            )

@@ -112,7 +112,7 @@ class PersonalizationEngine(DistDispatchMixin):
 
     def __init__(self, cfg: PersonalizeConfig):
         self.cfg = cfg
-        self.dist = DistContext(cfg.dist)
+        self.dist = DistContext(cfg.dist, engine="personalization")
         # mesh mode: replicate the shared factored state, shard the cohort
         # axis of the packed client arrays, gather the per-tenant outputs
         # back along the same axis (no reduction: heads are per-client)
@@ -240,6 +240,12 @@ class PersonalizationEngine(DistDispatchMixin):
         self, state: Fed3RFactored, packed: PackedPersonalCohort
     ) -> PersonalizedHeads:
         """Sweep α and solve K personalized heads in ONE jitted dispatch."""
+        with self.dist.telemetry.span("solve_heads", engine="personalization"):
+            return self._solve_heads(state, packed)
+
+    def _solve_heads(
+        self, state: Fed3RFactored, packed: PackedPersonalCohort
+    ) -> PersonalizedHeads:
         self.dist.dispatch()
         W, alphas, score = self._solve(
             state.L,
@@ -261,6 +267,15 @@ class PersonalizationEngine(DistDispatchMixin):
         alphas: jax.Array,  # (K,) per-client weights, no selection sweep
     ) -> PersonalizedHeads:
         """Solve K heads at fixed per-client α_k in ONE jitted dispatch."""
+        with self.dist.telemetry.span("solve_at", engine="personalization"):
+            return self._solve_at_host(state, packed, alphas)
+
+    def _solve_at_host(
+        self,
+        state: Fed3RFactored,
+        packed: PackedPersonalCohort,
+        alphas: jax.Array,
+    ) -> PersonalizedHeads:
         self.dist.dispatch()
         a = jnp.asarray(alphas, jnp.float32)
         W = self._solve_at(

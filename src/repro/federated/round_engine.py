@@ -90,7 +90,7 @@ class RoundEngine(DistDispatchMixin):
             loss_fn, cfg.algo, lr=cfg.client_lr,
             weight_decay=cfg.weight_decay, jit=False,
         )
-        self.dist = DistContext(cfg.dist)
+        self.dist = DistContext(cfg.dist, engine="rounds")
         # mesh mode: shard the cohort axis of the packed batches/ids over
         # the data axes; server state replicated in and (post all-reduce) out
         sharded = self.dist.data_spec()
@@ -167,9 +167,10 @@ class RoundEngine(DistDispatchMixin):
 
     def step(self, state: ServerState, cohort: PackedCohort) -> ServerState:
         """Run one round over a packed cohort (ONE jitted dispatch)."""
-        self.dist.dispatch()
-        batches = {k: jnp.asarray(v) for k, v in cohort.batches().items()}
-        return self._step(state, batches, jnp.asarray(cohort.client_ids))
+        with self.dist.telemetry.span("round_step", engine="rounds"):
+            self.dist.dispatch()
+            batches = {k: jnp.asarray(v) for k, v in cohort.batches().items()}
+            return self._step(state, batches, jnp.asarray(cohort.client_ids))
 
 
 class ReferenceLoop:

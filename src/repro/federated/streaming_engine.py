@@ -141,7 +141,7 @@ class StreamingEngine(DistDispatchMixin):
         self.feature_fn = feature_fn
         self.rff_params = rff_params
         self.wire = cfg.wire.resolved()  # fp8 → int8 fallback off-TPU
-        self.dist = DistContext(cfg.dist)
+        self.dist = DistContext(cfg.dist, engine="streaming")
         # mesh mode: shard the wave-WIDTH axis (dim 1; dim 0 is the scanned
         # arrival clock) over the data axes; state/params replicated
         sharded = self.dist.data_spec(axis=1)
@@ -331,14 +331,15 @@ class StreamingEngine(DistDispatchMixin):
         Returns the advanced state (the served classifier is ``state.W``)
         and the per-wave :class:`WaveTrace`.
         """
-        self.dist.dispatch()
-        return self._absorb(
-            state,
-            jnp.asarray(packed.inputs),
-            jnp.asarray(packed.labels),
-            jnp.asarray(packed.mask),
-            params,
-        )
+        with self.dist.telemetry.span("absorb", engine="streaming"):
+            self.dist.dispatch()
+            return self._absorb(
+                state,
+                jnp.asarray(packed.inputs),
+                jnp.asarray(packed.labels),
+                jnp.asarray(packed.mask),
+                params,
+            )
 
     def absorb_stats(
         self, state: StreamState, A: jax.Array, b: jax.Array, n: jax.Array
@@ -360,16 +361,18 @@ class StreamingEngine(DistDispatchMixin):
                 "dist-owned mesh use absorb(), or shard_map the "
                 "_absorb_stats_impl core over per-device partials"
             )
-        self.dist.dispatch()
-        return self._absorb_stats(
-            state, jnp.asarray(A), jnp.asarray(b),
-            jnp.asarray(n, dtype=jnp.float32),
-        )
+        with self.dist.telemetry.span("absorb_stats", engine="streaming"):
+            self.dist.dispatch()
+            return self._absorb_stats(
+                state, jnp.asarray(A), jnp.asarray(b),
+                jnp.asarray(n, dtype=jnp.float32),
+            )
 
     def refresh(self, state: StreamState) -> StreamState:
         """Force a classifier re-solve now (e.g. before a query burst)."""
-        self.dist.dispatch()
-        return self._refresh(state)
+        with self.dist.telemetry.span("refresh", engine="streaming"):
+            self.dist.dispatch()
+            return self._refresh(state)
 
     def classifier(self, state: StreamState) -> jax.Array:
         """The currently SERVED classifier (possibly stale, by policy)."""

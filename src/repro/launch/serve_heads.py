@@ -53,6 +53,7 @@ from repro.federated.personalization import (
     PersonalizeConfig,
 )
 from repro.federated.streaming_engine import StreamConfig, StreamingEngine
+from repro.federated.telemetry import get_telemetry
 
 
 class HeadCache:
@@ -378,7 +379,7 @@ def serve_heads(
         "wave": [], "per_tenant": [], "global": [], "solved_now": [],
         "hit_rate": [], "acc_personal": [],
     }
-    t0 = time.time()
+    t0 = time.perf_counter()
     if verbose:
         print(f"engine={engine} invalidation={invalidation} traffic={traffic} "
               f"tenants={fed.n_clients} cache={cache_capacity} "
@@ -444,7 +445,10 @@ def serve_heads(
             "stale_evictions": server.cache.stale_evictions,
             "lru_evictions": server.cache.lru_evictions,
         }
-    log["wall_s"] = time.time() - t0
+    log["wall_s"] = time.perf_counter() - t0
+    get_telemetry().gauge(
+        "driver_wall_seconds", driver="serve_heads", engine=engine
+    ).set(log["wall_s"])
     if verbose:
         c = log["cache"]
         print(f"global-head test acc={acc_global:.4f}  "

@@ -57,6 +57,7 @@ from repro.federated.arrivals import (
     skewed_schedule,
 )
 from repro.federated.streaming_engine import StreamConfig, StreamingEngine
+from repro.federated.telemetry import get_telemetry
 
 
 def serve_stream(
@@ -142,7 +143,7 @@ def serve_stream(
         "engine": engine,
     }
     seen = 0
-    t0 = time.time()
+    t0 = time.perf_counter()  # monotonic: wall clock steps under NTP
     if verbose:
         print(f"engine={engine} policy={policy} refresh_every={refresh_every} "
               f"waves={packed.n_waves} clients={packed.n_clients}")
@@ -196,7 +197,10 @@ def serve_stream(
         ))
         log["dispatches"] = stream_engine.dispatches
     log["acc_final"] = acc
-    log["wall_s"] = time.time() - t0
+    log["wall_s"] = time.perf_counter() - t0
+    get_telemetry().gauge(
+        "driver_wall_seconds", driver="serve_stream", engine=engine
+    ).set(log["wall_s"])
     if verbose:
         print(f"final sync: acc={acc:.4f}  "
               f"({log['dispatches']} dispatches for {packed.n_waves} waves, "
@@ -223,7 +227,7 @@ def _serve_async(
         client_payloads,
     )
 
-    t0 = _time.time()
+    t0 = _time.perf_counter()
     per_round = max(1, int(round(rate)))
     eng = AsyncRoundEngine(AsyncConfig(
         n_classes=n_classes, ridge_lambda=ridge_lambda, cohort=per_round,
@@ -284,7 +288,10 @@ def _serve_async(
     log["acc_final"] = acc
     log["dispatches"] = eng.dispatches
     log["chaos"] = eng.report()
-    log["wall_s"] = _time.time() - t0
+    log["wall_s"] = _time.perf_counter() - t0
+    get_telemetry().gauge(
+        "driver_wall_seconds", driver="serve_stream", engine="async"
+    ).set(log["wall_s"])
     if verbose:
         rep = log["chaos"]
         print(f"final drain: acc={acc:.4f}  ({eng.dispatches} dispatches; "

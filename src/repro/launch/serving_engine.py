@@ -34,6 +34,17 @@ counters are tracked per stage, decode-microbenchmark style
 (``benchmarks/bench_serving.py`` reports p50/p99 latency and sustained
 QPS under Zipf traffic against the synchronous LRU path).
 
+Observability (:mod:`repro.federated.telemetry`): every stage runs under
+a span (``span_seconds{engine=serving, stage=tick/solve, ...}``), the
+stage dispatch counters and hit/miss/shed tallies are homed in the
+registry (``engine_dispatches_total{engine=serving, stage=...}``,
+``serving_cache_*_total``, ``serving_shed_total{reason=...}``) behind
+back-compat attributes, per-request latency feeds the log-bucketed
+``serving_latency_seconds`` histogram, and overflow/deadline sheds land
+in the flight recorder.  All timing is on the monotonic
+``time.perf_counter`` clock — the wall clock steps backwards under NTP,
+which can make p99 and deadline accounting go negative.
+
 ``launch/serve_heads``/``launch/serve_stream`` expose this engine behind
 ``--engine slots`` as thin compatibility drivers with unchanged reports.
 """
@@ -58,6 +69,7 @@ from repro.federated.personalization import (
 )
 from repro.federated.slots import SlotTable
 from repro.federated.streaming_engine import StreamConfig, StreamingEngine
+from repro.federated.telemetry import Telemetry, get_telemetry
 
 
 @dataclass(frozen=True)
@@ -116,7 +128,7 @@ class Request(NamedTuple):
     tenant: int
     x: np.ndarray  # (d,)
     tick: int  # ticks completed when the request was admitted
-    t_enq: float  # wall clock at admission (latency accounting)
+    t_enq: float  # monotonic perf_counter at admission (latency accounting)
 
 
 class ServingEngine:
@@ -130,9 +142,12 @@ class ServingEngine:
     ``range(dataset.n_clients)`` are served the pinned global head.
     """
 
-    def __init__(self, cfg: ServingConfig, dataset):
+    def __init__(
+        self, cfg: ServingConfig, dataset, *, telemetry: Optional[Telemetry] = None
+    ):
         self.cfg = cfg
         self.dataset = dataset
+        self.telemetry = get_telemetry() if telemetry is None else telemetry
         self.stream = StreamingEngine(StreamConfig(
             n_classes=cfg.n_classes, ridge_lambda=cfg.ridge_lambda,
             normalize=cfg.normalize, use_kernel=cfg.use_kernel,
@@ -151,16 +166,32 @@ class ServingEngine:
         self.ticks = 0
         self.global_version = 0
         self.tenant_versions: Dict[int, int] = {}
-        # stage dispatch counters + wall-times (decode-microbenchmark style)
-        self.absorb_dispatches = 0
-        self.solve_dispatches = 0
-        self.serve_dispatches = 0
+        # stage dispatch counters + wall-times (decode-microbenchmark style),
+        # homed in the telemetry registry behind back-compat properties;
+        # one labeled cell per engine instance keeps N servers independent
+        t, inst = self.telemetry, self.telemetry.next_instance("serving")
+        self._cells = {
+            "absorb_dispatches": t.counter(
+                "engine_dispatches_total", engine="serving", stage="absorb", inst=inst
+            ),
+            "solve_dispatches": t.counter(
+                "engine_dispatches_total", engine="serving", stage="solve", inst=inst
+            ),
+            "serve_dispatches": t.counter(
+                "engine_dispatches_total", engine="serving", stage="serve", inst=inst
+            ),
+            "hits": t.counter("serving_cache_hits_total", inst=inst),
+            "misses": t.counter("serving_cache_misses_total", inst=inst),
+            "shed_overflow": t.counter(
+                "serving_shed_total", reason="overflow", inst=inst
+            ),
+            "shed_deadline": t.counter(
+                "serving_shed_total", reason="deadline", inst=inst
+            ),
+            "slot_overflow": t.counter("serving_slot_overflow_total", inst=inst),
+        }
+        self._latency_hist = t.histogram("serving_latency_seconds", inst=inst)
         self.stage_s = {"absorb": 0.0, "solve": 0.0, "serve": 0.0}
-        self.hits = 0  # fresh-resident tenant lookups
-        self.misses = 0  # tenant lookups that needed a solve
-        self.shed_overflow = 0
-        self.shed_deadline = 0
-        self.slot_overflow = 0  # tenants served global for want of a slot
         self._solve = jax.jit(
             self._solve_impl, donate_argnums=donate_argnums(True, (0,))
         )
@@ -168,6 +199,27 @@ class ServingEngine:
             self._refresh_global_impl, donate_argnums=donate_argnums(True, (0,))
         )
         self._serve = jax.jit(self._serve_impl)
+
+    # counters proxied onto their telemetry cells — `self.hits += 1` and the
+    # benchmarks' reset-to-zero idiom keep working unchanged
+    def _cell(name: str):  # noqa: N805 — descriptor factory, not a method
+        def _get(self) -> int:
+            return int(self._cells[name].value)
+
+        def _set(self, value: int) -> None:
+            self._cells[name].set(int(value))
+
+        return property(_get, _set)
+
+    absorb_dispatches = _cell("absorb_dispatches")
+    solve_dispatches = _cell("solve_dispatches")
+    serve_dispatches = _cell("serve_dispatches")
+    hits = _cell("hits")  # fresh-resident tenant lookups
+    misses = _cell("misses")  # tenant lookups that needed a solve
+    shed_overflow = _cell("shed_overflow")
+    shed_deadline = _cell("shed_deadline")
+    slot_overflow = _cell("slot_overflow")  # tenants served global, no slot
+    del _cell
 
     # ---- jitted stages ----------------------------------------------------
 
@@ -208,10 +260,11 @@ class ServingEngine:
         """Absorb stage: fold an arrival segment (one dispatch), advance the
         global version, and bump the per-tenant versions of the clients
         whose own statistics arrived."""
-        t0 = time.time()
-        self.state, trace = self.stream.absorb(self.state, packed, params)
-        jax.block_until_ready(self.state.L)
-        self.stage_s["absorb"] += time.time() - t0
+        t0 = time.perf_counter()
+        with self.telemetry.span("absorb", engine="serving"):
+            self.state, trace = self.stream.absorb(self.state, packed, params)
+            jax.block_until_ready(self.state.L)
+        self.stage_s["absorb"] += time.perf_counter() - t0
         self.absorb_dispatches += 1
         self.global_version += 1
         touched = np.unique(np.asarray(packed.client_ids))
@@ -237,7 +290,7 @@ class ServingEngine:
 
         Returns ``(admitted, shed)``.
         """
-        now = time.time()
+        now = time.perf_counter()
         xs = np.asarray(xs)
         admitted = shed = 0
         for cid, x in zip(tenant_ids, xs):
@@ -247,6 +300,10 @@ class ServingEngine:
                 self.queue.append(Request(int(cid), x, self.ticks, now))
                 admitted += 1
         self.shed_overflow += shed
+        if shed:
+            self.telemetry.event(
+                "request_shed", reason="overflow", shed=shed, tick=self.ticks
+            )
         return admitted, shed
 
     def _dequeue(self) -> Tuple[List[Request], int]:
@@ -266,6 +323,10 @@ class ServingEngine:
                 continue
             batch.append(r)
         self.shed_deadline += shed
+        if shed:
+            self.telemetry.event(
+                "request_shed", reason="deadline", shed=shed, tick=self.ticks
+            )
         return batch, shed
 
     def tick(self) -> Tuple[Optional[jax.Array], dict]:
@@ -322,7 +383,9 @@ class ServingEngine:
         self.slot_overflow += len(overflow)
         solved = in_place + placed
 
-        t0 = time.time()
+        t0 = time.perf_counter()
+        span = self.telemetry.span("solve", engine="serving")
+        span.__enter__()
         if solved:
             slot_map = {t: s for t, s in solved}
             clients = []
@@ -368,7 +431,8 @@ class ServingEngine:
             self.solve_dispatches += 1
             self.table.global_slot_version = self.global_version
         jax.block_until_ready(self.table.heads)
-        self.stage_s["solve"] += time.time() - t0
+        span.__exit__(None, None, None)
+        self.stage_s["solve"] += time.perf_counter() - t0
         report["solved_now"] = len(solved)
         report["slot_overflow"] = len(overflow)
 
@@ -397,17 +461,22 @@ class ServingEngine:
         xs_pad[:q] = xs
         idx_pad = np.zeros((bucket,), np.int32)
         idx_pad[:q] = slot_idx
-        t0 = time.time()
-        scores = self._serve(
-            self.table.heads, jnp.asarray(idx_pad), jnp.asarray(xs_pad)
-        )[:q]
-        jax.block_until_ready(scores)
-        done = time.time()
+        t0 = time.perf_counter()
+        with self.telemetry.span("serve", engine="serving"):
+            scores = self._serve(
+                self.table.heads, jnp.asarray(idx_pad), jnp.asarray(xs_pad)
+            )[:q]
+            jax.block_until_ready(scores)
+        done = time.perf_counter()
         self.stage_s["serve"] += done - t0
         self.serve_dispatches += 1
         served_slots, counts = np.unique(slot_idx, return_counts=True)
         self.table.touch(served_slots.tolist(), counts.tolist(), self.ticks)
         report["latency_s"] = [done - r.t_enq for r in batch]
+        if self.telemetry.enabled:
+            observe = self._latency_hist.observe
+            for lat in report["latency_s"]:
+                observe(lat)
         report["evictions"] = self.table.evictions
         return scores, report
 
