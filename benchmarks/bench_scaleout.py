@@ -17,7 +17,12 @@ gated only loosely.
 Each N runs in a SUBPROCESS: jax locks the device count at first init, so
 the parent spawns one worker per N with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the same knob the
-multi-pod dry run uses, see ``repro.launch.dryrun``).
+multi-pod dry run uses, see ``repro.launch.dryrun``).  Each worker ships
+its own telemetry snapshot back in the result JSON and the parent merges
+them into the harness registry
+(:meth:`repro.federated.telemetry.Telemetry.merge_snapshot`), so the
+persisted ``telemetry_scaleout.json`` carries the real dispatch counters
+and ``check_regression`` gates them like every other bench.
 
 Usage: PYTHONPATH=src:. python benchmarks/bench_scaleout.py [--smoke]
 """
@@ -206,6 +211,12 @@ def worker(n_dev: int, reps: int) -> dict:
         "per_call_s": _timed_calls(lambda: p_eng.solve_heads(fac, pcohort).W, reps),
         "err": float(jnp.max(jnp.abs(heads.W - ref_heads.W))),
     }
+    # the worker's own registry rides home in the result JSON: the parent
+    # merges it, so the scaleout dispatch counters land in the persisted
+    # telemetry snapshot like every in-process bench's
+    from repro.federated.telemetry import get_telemetry
+
+    out["telemetry"] = get_telemetry().snapshot()
     return out
 
 
@@ -237,11 +248,15 @@ ENGINES = ("engine", "streaming", "rounds", "personalize")
 
 def main(smoke: bool = False) -> dict:
     from benchmarks.common import emit
+    from repro.federated.telemetry import get_telemetry
 
     reps = 1 if smoke else 3
     result: dict = {"device_counts": list(DEVICE_COUNTS)}
     for n_dev in DEVICE_COUNTS:
         rec = _run_worker(n_dev, reps)
+        worker_snap = rec.pop("telemetry", None)
+        if worker_snap:
+            get_telemetry().merge_snapshot(worker_snap)
         result[f"n{n_dev}"] = rec
         for name in ENGINES:
             r = rec[name]

@@ -1,0 +1,513 @@
+"""Hierarchical N-tier aggregation trees vs the flat/two-stage baseline.
+
+The claims under test (ISSUE 10 acceptance):
+
+* routing every engine's all-reduce through an fp32
+  :class:`repro.federated.tiers.AggregationTree` is BITWISE identical to
+  the two-stage psum AND to the single-device merge backend, at 1-, 2-
+  and 3-tier mesh shapes, still in ONE host dispatch per call — measured
+  on a subprocess worker with 8 simulated host devices (the same
+  ``xla_force_host_platform_device_count`` knob as ``bench_scaleout``);
+* the overlapped :class:`repro.federated.tiers.TieredAbsorber` (upper
+  DCN/WAN reduction of segment t concurrent with the lower fold +
+  extraction of segment t+1) sustains ≥ 1.3× the blocking two-stage
+  throughput at the 8-leaf 3-tier CI shape.  Like ``bench_async``, the
+  gated figure is the DETERMINISTIC scheduled makespan at
+  ``CostModel``-priced tier times (on shared CI CPUs, host and "device"
+  compute contend for the same cores, so wall time measures contention,
+  not DCN overlap — wall times are still reported and loosely gated);
+* blocking == overlapped == ``engine.absorb_stats`` of the flat sum,
+  bitwise, and the absorber's host dispatch counts are EXACT: one fused
+  dispatch per segment blocking (at every tier count), lower + upper per
+  segment overlapped;
+* the per-tier byte meters match ``CostModel.tiered_allreduce``:
+  the measured-vs-model drift gauge must sit inside [0.5, 2.0]×, and the
+  same pricer produces the 512-device × 2-pod dry-run figures.
+
+Usage: PYTHONPATH=src:. python benchmarks/bench_tiers.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+# ---- worker (8 simulated devices) workload ---------------------------------
+N_DEV = 8
+D_FEAT = 32
+N_CLASSES = 10
+SHARDS_PER_DEV = 2
+CLIENTS_PER_SHARD = 2
+SAMPLES_PER_CLIENT = 16
+RIDGE_LAMBDA = 0.1
+# the 1/2/3-tier shapes of the same 8 devices (outermost tier first)
+TIER_SHAPES = {"tiers1": (8,), "tiers2": (2, 4), "tiers3": (2, 2, 2)}
+
+# ---- host-absorber workload -------------------------------------------------
+ABS_D = 64
+ABS_C = 16
+ABS_N = 128  # samples per edge block per segment
+
+
+def _grid(rng, shape):
+    # features on a 1/8 grid in [-2, 2]: fp32 partial sums are EXACT at
+    # this scale, so every reduction order is bitwise identical (the same
+    # contract bench_scaleout gates; see its make_clients note)
+    return (rng.integers(-16, 17, size=shape) / 8.0).astype("float32")
+
+
+# ---------------------------------------------------------------------------
+# worker: mesh-routed trees on 8 simulated devices, one process
+# ---------------------------------------------------------------------------
+
+
+def worker() -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import fed3r
+    from repro.data.pipeline import (
+        pack_arrival_waves,
+        pack_client_shards,
+        pack_cohort_batches,
+        pack_personal_cohort,
+    )
+    from repro.federated.algorithms import make_algorithm
+    from repro.federated.arrivals import UploadEvent
+    from repro.federated.async_engine import AsyncConfig, AsyncRoundEngine
+    from repro.federated.dist import DistConfig
+    from repro.federated.engine import AccumulationEngine, EngineConfig
+    from repro.federated.personalization import (
+        PersonalizationEngine,
+        PersonalizeConfig,
+    )
+    from repro.federated.round_engine import RoundConfig, RoundEngine
+    from repro.federated.streaming_engine import StreamConfig, StreamingEngine
+    from repro.federated.telemetry import get_telemetry
+    from repro.federated.tiers import mesh_tree
+    from repro.launch.mesh import make_tier_host_mesh
+
+    assert len(jax.devices()) == N_DEV, (len(jax.devices()), N_DEV)
+
+    def make_clients(seed, k):
+        rng = np.random.default_rng(seed)
+        return [
+            (
+                _grid(rng, (SAMPLES_PER_CLIENT, D_FEAT)),
+                rng.integers(0, N_CLASSES, size=SAMPLES_PER_CLIENT).astype(np.int32),
+            )
+            for _ in range(k)
+        ]
+
+    out: dict = {"n_devices": N_DEV}
+
+    for key, shape in TIER_SHAPES.items():
+        mesh = make_tier_host_mesh(shape)
+        tree = mesh_tree(mesh)
+        dist_tree = DistConfig(
+            aggregation="psum", mesh=mesh, donate=False, tree=tree
+        )
+        dist_flat = DistConfig(aggregation="psum", mesh=mesh, donate=False)
+        rec: dict = {"shape": list(shape), "axes": list(tree.axes)}
+
+        # ---- batch statistics engine: tree vs two-stage vs merge ----------
+        clients = make_clients(1, N_DEV * SHARDS_PER_DEV * CLIENTS_PER_SHARD)
+        packed = pack_client_shards(clients, CLIENTS_PER_SHARD, mesh=mesh)
+        accs = {}
+        for name, dist in (("tree", dist_tree), ("flat", dist_flat), ("merge", None)):
+            cfg = EngineConfig(n_classes=N_CLASSES) if dist is None else EngineConfig(
+                n_classes=N_CLASSES, dist=dist
+            )
+            eng = AccumulationEngine(cfg)
+            eng.accumulate(eng.init(D_FEAT), packed)  # warm the trace
+            eng.dispatches = 0
+            accs[name] = eng.accumulate(eng.init(D_FEAT), packed)
+            if dist is not None:
+                rec[f"engine_{name}_dispatches"] = eng.dispatches
+        rec["engine_bitwise"] = bool(
+            np.array_equal(np.asarray(accs["tree"].stats.A), np.asarray(accs["flat"].stats.A))
+            and np.array_equal(np.asarray(accs["tree"].stats.A), np.asarray(accs["merge"].stats.A))
+            and np.array_equal(np.asarray(accs["tree"].stats.b), np.asarray(accs["merge"].stats.b))
+        )
+
+        # ---- streaming engine: tree vs two-stage vs merge ------------------
+        waves = [make_clients(10 + w, N_DEV) for w in range(3)]
+        arrivals = pack_arrival_waves(waves, mesh=mesh)
+        ws = {}
+        for name, dist in (("tree", dist_tree), ("flat", dist_flat), ("merge", None)):
+            scfg = dict(n_classes=N_CLASSES, ridge_lambda=RIDGE_LAMBDA)
+            s_eng = StreamingEngine(
+                StreamConfig(**scfg) if dist is None else StreamConfig(**scfg, dist=dist)
+            )
+            s_eng.absorb(s_eng.init(D_FEAT), arrivals)
+            s_eng.dispatches = 0
+            state, _ = s_eng.absorb(s_eng.init(D_FEAT), arrivals)
+            ws[name] = np.asarray(state.W)
+            if dist is not None:
+                rec[f"streaming_{name}_dispatches"] = s_eng.dispatches
+        rec["streaming_bitwise"] = bool(
+            np.array_equal(ws["tree"], ws["flat"])
+            and np.array_equal(ws["tree"], ws["merge"])
+        )
+        out[key] = rec
+
+    # ---- rounds + personalization: tree == two-stage on the 3-tier mesh ----
+    mesh = make_tier_host_mesh(TIER_SHAPES["tiers3"])
+    tree = mesh_tree(mesh)
+    dist_tree = DistConfig(aggregation="psum", mesh=mesh, donate=False, tree=tree)
+    dist_flat = DistConfig(aggregation="psum", mesh=mesh, donate=False)
+    rec = out["tiers3"]
+
+    cohort_clients = make_clients(20, N_DEV)
+    cohort = pack_cohort_batches(cohort_clients, 8, 2, mesh=mesh)
+    params0 = {"W": jnp.zeros((D_FEAT, N_CLASSES), jnp.float32)}
+    freeze = jax.tree.map(lambda _: 1.0, params0)
+
+    def per_example_loss(params, batch):
+        logits = batch["x"] @ params["W"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, batch["y"][:, None].astype(jnp.int32), axis=-1
+        )[:, 0]
+        return lse - picked
+
+    r_ws = {}
+    for name, dist in (("tree", dist_tree), ("flat", dist_flat)):
+        rcfg = dict(algo=make_algorithm("fedavg"), client_lr=0.1,
+                    n_total_clients=len(cohort_clients), dist=dist)
+        r_eng = RoundEngine(RoundConfig(**rcfg), per_example_loss, freeze)
+        r_eng.step(r_eng.init(params0), cohort)
+        r_eng.dispatches = 0
+        r_ws[name] = np.asarray(r_eng.step(r_eng.init(params0), cohort).params["W"])
+        rec[f"rounds_{name}_dispatches"] = r_eng.dispatches
+    rec["rounds_bitwise"] = bool(np.array_equal(r_ws["tree"], r_ws["flat"]))
+
+    tenants = make_clients(30, N_DEV)
+    pcohort = pack_personal_cohort(tenants, mesh=mesh)
+    fac = fed3r.init_factored(D_FEAT, N_CLASSES, RIDGE_LAMBDA)
+    fac = fed3r.factored_update(
+        fac,
+        jnp.asarray(np.concatenate([x for x, _ in tenants])),
+        jnp.asarray(np.concatenate([y for _, y in tenants])),
+    )
+    p_ws = {}
+    for name, dist in (("tree", dist_tree), ("flat", dist_flat)):
+        p_eng = PersonalizationEngine(
+            PersonalizeConfig(n_classes=N_CLASSES, dist=dist)
+        )
+        p_eng.solve_heads(fac, pcohort)
+        p_eng.dispatches = 0
+        p_ws[name] = np.asarray(p_eng.solve_heads(fac, pcohort).W)
+        rec[f"personalize_{name}_dispatches"] = p_eng.dispatches
+    rec["personalize_bitwise"] = bool(np.array_equal(p_ws["tree"], p_ws["flat"]))
+
+    # ---- async engine: dist-owned mesh + tree == merge (PR-8 headroom) -----
+    def client_payload(c):
+        rng = np.random.default_rng((40, c))
+        f = _grid(rng, (SAMPLES_PER_CLIENT, D_FEAT))
+        y = rng.integers(0, N_CLASSES, size=SAMPLES_PER_CLIENT)
+        return jax.tree.map(
+            jax.block_until_ready,
+            fed3r.client_stats(jnp.asarray(f), jnp.asarray(y), N_CLASSES),
+        )
+
+    payloads = {c: client_payload(c) for c in range(N_DEV)}
+
+    def run_async(dist):
+        acfg = dict(n_classes=N_CLASSES, ridge_lambda=RIDGE_LAMBDA, cohort=N_DEV)
+        eng = AsyncRoundEngine(
+            AsyncConfig(**acfg) if dist is None else AsyncConfig(**acfg, dist=dist)
+        )
+        st = eng.init(D_FEAT)
+        eng.begin_round(0, list(range(N_DEV)), 0.0)
+        for c in np.random.default_rng(41).permutation(N_DEV):
+            st, status = eng.deliver(
+                st, UploadEvent(round_id=0, client=int(c), t=0.1, attempt=0),
+                payloads[int(c)],
+            )
+            assert status == "folded", status
+        st = eng.close_round(st, 0, now=1.0)
+        return np.asarray(eng.drain(st).W)
+
+    w_async = {
+        "merge": run_async(None),
+        "mesh": run_async(dist_flat),
+        "mesh_tree": run_async(dist_tree),
+    }
+    rec["async_bitwise"] = bool(
+        np.array_equal(w_async["merge"], w_async["mesh"])
+        and np.array_equal(w_async["merge"], w_async["mesh_tree"])
+    )
+
+    out["telemetry"] = get_telemetry().snapshot()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# parent: host-tier absorber, scheduled overlap makespan, dry-run pricing
+# ---------------------------------------------------------------------------
+
+
+def _run_worker() -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={N_DEV}"
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--worker"],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"tiers worker (N={N_DEV}) failed:\n{proc.stdout}\n{proc.stderr}"
+        )
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def _ci_tree(tiers_mod, staleness=2, top_wire=None):
+    """The 8-leaf 3-tier CI shape: 2 edge × 2 region × 2 cloud, ICI/DCN/WAN."""
+    from repro.launch.mesh import DCN_BW, ICI_BW, WAN_BW
+
+    return tiers_mod.AggregationTree((
+        tiers_mod.TierSpec("edge", fan_in=2, bandwidth=ICI_BW),
+        tiers_mod.TierSpec("region", fan_in=2, bandwidth=DCN_BW),
+        tiers_mod.TierSpec(
+            "cloud", fan_in=2, bandwidth=WAN_BW, staleness=staleness,
+            **({"wire": top_wire} if top_wire is not None else {}),
+        ),
+    ))
+
+
+def scheduled_makespan(
+    cm, tree, *, n_segments: int, samples_per_leaf: int,
+    flops_per_s: float = 1.97e14,
+) -> dict:
+    """Deterministic pipeline schedule at CostModel-priced leg times.
+
+    LOWER leg per segment = feature extraction of every leaf block + the
+    collective crossings below the top tier; UPPER leg = the top (WAN)
+    crossing + the Gram refactorization/solve.  Blocking runs the legs
+    serially per segment; the overlapped absorber is a two-stage pipeline
+    (upper of segment t concurrent with lower of t+1), so its makespan is
+    ``lower + (S-1)·max(lower, upper) + upper``.  All inputs are model
+    constants — the speedup gates deterministically, like bench_async's
+    simulated makespan.
+    """
+    priced = cm.tiered_allreduce(tree.as_cost_tiers())
+    per_tier = {t["name"]: t["tier_s"] for t in priced["tiers"]}
+    extract_s = tree.leaves * samples_per_leaf * cm.F_phi / flops_per_s
+    solve_s = (cm.d**3 / 3.0 + 2.0 * cm.d**2 * cm.C) / flops_per_s
+    lower_s = extract_s + sum(per_tier[t.name] for t in tree.tiers[:-1])
+    upper_s = per_tier[tree.tiers[-1].name] + solve_s
+    blocking = n_segments * (lower_s + upper_s)
+    overlapped = lower_s + (n_segments - 1) * max(lower_s, upper_s) + upper_s
+    return {
+        "lower_s": lower_s,
+        "upper_s": upper_s,
+        "blocking_makespan_s": blocking,
+        "overlap_makespan_s": overlapped,
+        "overlap_speedup": blocking / overlapped,
+        "priced": priced,
+    }
+
+
+def main(smoke: bool = False) -> dict:
+    import numpy as np
+
+    from benchmarks.common import emit
+    from repro.federated import tiers
+    from repro.federated.compress import WireFormat
+    from repro.federated.costs import LANDMARKS, CostModel
+    from repro.federated.engine import shard_stats
+    from repro.federated.streaming_engine import StreamConfig, StreamingEngine
+    from repro.federated.telemetry import get_telemetry
+    from repro.launch.mesh import DCN_BW, ICI_BW, WAN_BW
+
+    n_segments = 6 if smoke else 12
+    result: dict = {"n_segments": n_segments}
+
+    # ---- 1) mesh-routed trees on 8 simulated devices (subprocess) ----------
+    rec = _run_worker()
+    worker_snap = rec.pop("telemetry", None)
+    if worker_snap:
+        get_telemetry().merge_snapshot(worker_snap)
+    result["mesh"] = rec
+    for key in TIER_SHAPES:
+        r = rec[key]
+        emit(
+            f"tiers_mesh_{key}", 0.0,
+            f"shape={tuple(r['shape'])} engine_bitwise={r['engine_bitwise']} "
+            f"streaming_bitwise={r['streaming_bitwise']}",
+        )
+        for flag in ("engine_bitwise", "streaming_bitwise"):
+            assert r[flag], f"{key}: {flag} is False (tree != two-stage/merge)"
+        for k, v in r.items():
+            if k.endswith("_dispatches"):
+                assert v == 1, f"{key}.{k} = {v} (one-dispatch contract)"
+    for flag in ("rounds_bitwise", "personalize_bitwise", "async_bitwise"):
+        assert rec["tiers3"][flag], f"tiers3: {flag} is False"
+
+    # ---- 2) host-tier absorber: overlap == blocking == flat, exact counts --
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    tree = _ci_tree(tiers)
+    leaves = tree.leaves
+    segs = []
+    for _ in range(n_segments):
+        f = _grid(rng, (leaves, ABS_N, ABS_D))
+        l = rng.integers(0, ABS_C, size=(leaves, ABS_N)).astype(np.int32)
+        m = np.ones((leaves, ABS_N), np.float32)
+        segs.append((f, l, m))
+
+    eng = StreamingEngine(StreamConfig(n_classes=ABS_C, ridge_lambda=RIDGE_LAMBDA))
+    tel = get_telemetry()
+
+    def run_absorber(tree, overlap, cost_model=None):
+        ab = eng.tiered_absorber(
+            tree, overlap=overlap, cost_model=cost_model, telemetry=tel
+        )
+        f, l, m = segs[0]
+        ab.absorb_segment(f, l, m)  # warm the traces
+        ab.drain()
+        ab.reset(ABS_D)
+        before = ab.dist.dispatches
+        t0 = time.time()
+        for f, l, m in segs:
+            ab.absorb_segment(f, l, m)
+        state = ab.drain()
+        return state, time.time() - t0, ab.dist.dispatches - before
+
+    st_block, wall_block, disp_block = run_absorber(tree, overlap=False)
+    st_over, wall_over, disp_over = run_absorber(tree, overlap=True)
+    bitwise = bool(np.array_equal(np.asarray(st_block.W), np.asarray(st_over.W)))
+
+    # flat reference: the same segments through absorb_stats of the flat sum
+    st = eng.init(ABS_D)
+    for f, l, m in segs:
+        s = shard_stats(
+            jnp.asarray(f).reshape(-1, ABS_D),
+            jnp.asarray(l).reshape(-1),
+            ABS_C,
+            jnp.asarray(m).reshape(-1),
+        )
+        st = eng.absorb_stats(st, s.A, s.b, s.n)
+    flat_bitwise = bool(np.array_equal(np.asarray(st.W), np.asarray(st_over.W)))
+
+    assert bitwise, "overlapped W diverged from blocking (bitwise)"
+    assert flat_bitwise, "tiered W diverged from the flat absorb_stats (bitwise)"
+    assert disp_block == n_segments, (
+        f"blocking: {disp_block} dispatches for {n_segments} segments "
+        "(one fused dispatch per segment is the contract)"
+    )
+    assert disp_over == 2 * n_segments, (
+        f"overlapped: {disp_over} dispatches for {n_segments} segments "
+        "(one lower + one upper per segment is the contract)"
+    )
+
+    # one fused dispatch per segment at EVERY tier count (blocking path)
+    per_tier_counts = {}
+    for n_tiers, shapes in ((1, (8,)), (2, (4, 2)), (3, (2, 2, 2))):
+        t = tiers.AggregationTree(tuple(
+            tiers.TierSpec(f"t{i}", fan_in=k) for i, k in enumerate(shapes)
+        ))
+        _, _, disp = run_absorber(t, overlap=False)
+        per_tier_counts[f"dispatches_{n_tiers}tier"] = disp
+        assert disp == n_segments, (
+            f"{n_tiers}-tier blocking absorb: {disp} dispatches "
+            f"for {n_segments} segments"
+        )
+    result.update(per_tier_counts)
+
+    # ---- 3) int8 top tier: byte meters vs the cost model (drift gauge) -----
+    cm_abs = CostModel(b=2.22e6, d=ABS_D, C=ABS_C)
+    tree8 = _ci_tree(tiers, top_wire=WireFormat(kind="int8"))
+    st8_b, _, _ = run_absorber(tree8, overlap=False, cost_model=cm_abs)
+    st8_o, _, _ = run_absorber(tree8, overlap=True, cost_model=cm_abs)
+    int8_bitwise = bool(np.array_equal(np.asarray(st8_b.W), np.asarray(st8_o.W)))
+    assert int8_bitwise, "int8-tier overlapped W diverged from blocking"
+    drift = None
+    for g in tel.snapshot()["gauges"]:
+        if g["name"] == "tier_cost_model_drift":
+            drift = float(g["value"])
+    assert drift is not None, "tier_cost_model_drift gauge never published"
+    assert 0.5 <= drift <= 2.0, (
+        f"measured tier bytes drifted {drift:.3f}x from "
+        "CostModel.tiered_allreduce (acceptance band [0.5, 2.0])"
+    )
+
+    # ---- 4) scheduled overlap speedup at the CI shape (the gated figure) ---
+    sched = scheduled_makespan(
+        LANDMARKS, _ci_tree(tiers, top_wire=WireFormat(kind="int8")),
+        n_segments=n_segments, samples_per_leaf=256,
+    )
+    speedup = sched["overlap_speedup"]
+    assert speedup >= 1.3, (
+        f"overlapped tiered absorb must sustain >= 1.3x the blocking "
+        f"two-stage throughput at the 3-tier CI shape, got {speedup:.2f}x"
+    )
+
+    # ---- 5) 512-device x 2-pod dry-run pricing -----------------------------
+    dryrun_tree = tiers.AggregationTree((
+        tiers.TierSpec("edge", fan_in=16, bandwidth=ICI_BW),
+        tiers.TierSpec("region", fan_in=32, bandwidth=DCN_BW,
+                       wire=WireFormat(kind="int8")),
+        tiers.TierSpec("cloud", fan_in=2, bandwidth=WAN_BW,
+                       wire=WireFormat(kind="int8"), staleness=2),
+    ))
+    dry = LANDMARKS.tiered_allreduce(dryrun_tree.as_cost_tiers())
+    assert dry["leaves"] == 1024, dry["leaves"]  # 512 devices x 2 pods
+
+    emit(
+        "tiers_absorb_blocking", wall_block / n_segments * 1e6,
+        f"S={n_segments} leaves={leaves} dispatches={disp_block}",
+    )
+    emit(
+        "tiers_absorb_overlap", wall_over / n_segments * 1e6,
+        f"S={n_segments} leaves={leaves} dispatches={disp_over} "
+        f"bitwise={bitwise} sched_speedup={speedup:.2f}x",
+    )
+    emit(
+        "tiers_dryrun_512x2", 0.0,
+        f"total={dry['total_s']*1e3:.2f}ms vs flat={dry['flat_allreduce_s']*1e3:.2f}ms "
+        f"({dry['speedup_vs_flat']:.1f}x) uplink={dry['uplink_bytes_total']/1e9:.2f}GB "
+        f"drift={drift:.3f}",
+    )
+
+    result.update({
+        "leaves": leaves,
+        "tiered_bitwise": bitwise,
+        "flat_bitwise": flat_bitwise,
+        "int8_tiered_bitwise": int8_bitwise,
+        "blocking_dispatches": disp_block,
+        "overlap_dispatches": disp_over,
+        "blocking_wall_s": wall_block,
+        "overlap_wall_s": wall_over,
+        "overlap_wall_ratio": wall_block / wall_over if wall_over > 0 else 0.0,
+        "overlap_speedup": speedup,
+        "sched_lower_s": sched["lower_s"],
+        "sched_upper_s": sched["upper_s"],
+        "cost_model_drift": drift,
+        "dryrun_total_s": dry["total_s"],
+        "dryrun_flat_s": dry["flat_allreduce_s"],
+        "dryrun_speedup_vs_flat": dry["speedup_vs_flat"],
+        "dryrun_uplink_gb": dry["uplink_bytes_total"] / 1e9,
+    })
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small config (CI budget)")
+    ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.worker:
+        here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        if os.path.isdir(os.path.join(here, "src")):
+            sys.path.insert(0, os.path.join(here, "src"))
+        print(json.dumps(worker()))
+    else:
+        print(main(smoke=args.smoke))

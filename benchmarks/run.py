@@ -54,6 +54,7 @@ MODULES = [
     "bench_scaleout",
     "bench_compress",
     "bench_async",
+    "bench_tiers",
     "bench_invariance",
     "bench_ncm",
     "bench_rf",
@@ -74,6 +75,7 @@ JSON_OUT = {
     "bench_scaleout": "scaleout",
     "bench_compress": "compress",
     "bench_async": "async",
+    "bench_tiers": "tiers",
 }
 
 

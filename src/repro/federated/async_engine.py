@@ -42,12 +42,22 @@ that:
   the unmasked survivor sum bit for bit.
 
 * **Distribution.**  ``dist.aggregation="psum"`` all-reduces the retire
-  reduction's per-device partial cohort sums over the mesh axes (each
-  device scatters only the clients it owns; empty slots are exact no-op
-  zeros), via :meth:`repro.federated.dist.DistContext.all_reduce` inside
-  :meth:`AsyncRoundEngine.retire_fold` — usable inside an external
-  ``shard_map`` exactly like the pre-PR5 engine cores.  ``merge`` keeps
-  the all-reduce an identity (bitwise unchanged).
+  reduction's per-device partial cohort sums over the mesh axes (empty
+  slots are exact no-op zeros), via
+  :meth:`repro.federated.dist.DistContext.all_reduce` inside
+  :meth:`AsyncRoundEngine.retire_fold`.  Two ways to run it: wrap the
+  cores in an *external* ``shard_map`` where each shard scatters only the
+  clients it owns (the pre-PR5 contract), or hand the layer a
+  ``DistConfig(mesh=...)`` — the engine then builds its scatter/retire/
+  live programs through :meth:`repro.federated.dist.DistContext.jit`
+  itself, shards the slot ring's K axis over the data axes
+  (``shard_cohort`` shard-major slot layout, so each device owns a
+  contiguous local block), and masks the scatter so only the owning
+  device writes.  Both reduce in the same canonical order, so W stays
+  bitwise identical to the ``merge`` baseline; with
+  ``DistConfig(tree=...)`` the retire all-reduce runs the N-tier
+  aggregation tree (:mod:`repro.federated.tiers`).  ``merge`` keeps the
+  all-reduce an identity (bitwise unchanged).
 
 The fault model driving all of this lives in
 :mod:`repro.federated.arrivals` (:class:`~repro.federated.arrivals.
@@ -73,8 +83,15 @@ from repro.core.fed3r import Fed3RFactored, Fed3RStats
 from repro.federated import compress, secure_agg
 from repro.federated.arrivals import ChaosSpec, UploadEvent, chaos_round_events
 from repro.federated.compress import IntPayload, WireFormat
-from repro.federated.dist import DistConfig, DistContext, DistDispatchMixin
+from repro.federated.dist import (
+    DistConfig,
+    DistContext,
+    DistDispatchMixin,
+    linear_shard_index,
+    shard_cohort,
+)
 from repro.federated.telemetry import Telemetry, get_telemetry
+from repro.sharding.specs import replicated
 
 
 @dataclass(frozen=True)
@@ -224,13 +241,13 @@ class AsyncRoundEngine(DistDispatchMixin):
     """
 
     def __init__(self, cfg: AsyncConfig):
-        if cfg.dist.mesh is not None:
-            raise ValueError(
-                "async engine supports psum via an external shard_map (the "
-                "pre-PR5 contract); dist-owned meshes are a future extension"
-            )
         if cfg.secure and cfg.dist.aggregation == "psum":
             raise ValueError("secure mode and psum aggregation are exclusive")
+        if cfg.dist.mesh is not None and cfg.cohort % cfg.dist.data_shards != 0:
+            raise ValueError(
+                f"dist-owned mesh shards the K={cfg.cohort} slot axis over "
+                f"{cfg.dist.data_shards} data shards: K must divide evenly"
+            )
         self.cfg = cfg
         self.wire = cfg.wire.resolved()
         self.dist = DistContext(cfg.dist, engine="async")
@@ -255,10 +272,34 @@ class AsyncRoundEngine(DistDispatchMixin):
             )
         }
         donate = self.dist.cfg.donate
-        self._scatter = self.dist.jit(self._scatter_impl, donate=donate)
-        self._retire = self.dist.jit(self._retire_impl, donate=donate)
-        self._retire_secure = self.dist.jit(self._retire_secure_impl, donate=donate)
-        self._live = self.dist.jit(self._live_impl, donate=False)
+        # dist-owned mesh: the slot ring's K axis shards over the data axes
+        # (shard-major layout, see begin_round); the carried factored state,
+        # the scalar ring/slot indices, and the replicated upload payloads
+        # stay P().  Without a mesh the specs are ignored (plain jit).
+        rep = replicated()
+        slots = self.dist.data_spec(axis=1)
+        state_specs = AsyncState(
+            L=rep, b=rep, n=rep, W=rep,
+            A_slots=slots, b_slots=slots, n_slots=slots,
+        )
+        self._scatter = self.dist.jit(
+            self._scatter_impl, donate=donate,
+            in_specs=(state_specs, rep, rep, rep, rep, rep),
+            out_specs=state_specs,
+        )
+        self._retire = self.dist.jit(
+            self._retire_impl, donate=donate,
+            in_specs=(state_specs, rep), out_specs=state_specs,
+        )
+        # secure mode excludes psum (and so any mesh): only built off-mesh
+        self._retire_secure = (
+            None if cfg.dist.mesh is not None
+            else self.dist.jit(self._retire_secure_impl, donate=donate)
+        )
+        self._live = self.dist.jit(
+            self._live_impl, donate=False,
+            in_specs=(state_specs,), out_specs=rep,
+        )
 
     # fault/robustness counters proxied onto their telemetry cells (the
     # ``+=`` call sites and the chaos report keep working unchanged)
@@ -302,9 +343,22 @@ class AsyncRoundEngine(DistDispatchMixin):
         """Set one client's payload into its round slot (exactly-once set
         semantics: dedup happens on the host before dispatch).  The wire
         format applies here — the upload lands as the aggregator received
-        it; fp32 is the bitwise identity."""
+        it; fp32 is the bitwise identity.
+
+        Dist-owned mesh: the slot axis is sharded, so ``slot`` is a GLOBAL
+        index and each device translates it into its local block — the
+        owner writes the payload, every other device writes its current
+        value back (a masked exact no-op)."""
         if not self.cfg.secure:
             A, b = compress.wire_roundtrip(A, b, self.wire, self.cfg.use_kernel)
+        if self.cfg.dist.mesh is not None:
+            k_local = self.cfg.cohort // self.cfg.dist.data_shards
+            local = slot - linear_shard_index(self.cfg.dist.axis_names) * k_local
+            ok = (local >= 0) & (local < k_local)
+            slot = jnp.clip(local, 0, k_local - 1)
+            A = jnp.where(ok, A, state.A_slots[ring, slot])
+            b = jnp.where(ok, b, state.b_slots[ring, slot])
+            n = jnp.where(ok, n, state.n_slots[ring, slot])
         return state._replace(
             A_slots=state.A_slots.at[ring, slot].set(A),
             b_slots=state.b_slots.at[ring, slot].set(b),
@@ -314,10 +368,12 @@ class AsyncRoundEngine(DistDispatchMixin):
     def retire_fold(self, L, b, n, S_A, S_b, S_n):
         """Fold one round's reduced statistics into the factored state.
 
-        Pure; usable directly inside an external ``shard_map`` — under
-        ``psum`` the per-device partial cohort sums all-reduce here (empty
-        and remote slots are exact zeros), under ``merge`` the all-reduce
-        is the identity, keeping the fold bitwise.
+        Pure; runs inside an external ``shard_map`` or the dist-owned mesh
+        programs alike — under ``psum`` the per-device partial cohort sums
+        all-reduce here (empty and remote slots are exact zeros; with
+        ``DistConfig(tree=...)`` the reduction runs the N-tier aggregation
+        tree), under ``merge`` the all-reduce is the identity, keeping the
+        fold bitwise.
         """
         S_A, S_b, S_n = self.dist.all_reduce((S_A, S_b, S_n))
         G = L @ L.T + S_A
@@ -416,9 +472,23 @@ class AsyncRoundEngine(DistDispatchMixin):
             )
         if self.cfg.secure and scales is None:
             raise ValueError("secure rounds need the shared (sA, sb) scales")
+        if self.cfg.dist.mesh is not None:
+            # shard-major slot layout: device s owns the contiguous local
+            # block [s·K/dp, (s+1)·K/dp), filled with its round-robin
+            # shard_cohort share — the same ownership partition as the
+            # external-shard_map contract, reassembled by the retire psum
+            dp = self.cfg.dist.data_shards
+            k_local = self.cfg.cohort // dp
+            slot_of = {
+                c: s * k_local + j
+                for s in range(dp)
+                for j, c in enumerate(shard_cohort(ids, s, dp))
+            }
+        else:
+            slot_of = {c: i for i, c in enumerate(ids)}
         self._rounds[round_id] = _RoundMeta(
             cohort=ids,
-            slot_of={c: i for i, c in enumerate(ids)},
+            slot_of=slot_of,
             start_t=start_t,
             scales=scales,
         )

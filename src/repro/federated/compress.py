@@ -271,6 +271,51 @@ def roundtrip_add(
     return accA + Ah, accb + bh
 
 
+def matrix_roundtrip(
+    x: jax.Array, fmt: WireFormat, use_kernel: Optional[bool] = None
+) -> jax.Array:
+    """Lossy wire roundtrip of ONE 2-D matrix (``fp32`` = bitwise identity).
+
+    The per-leaf primitive of the N-tier aggregation tree
+    (:mod:`repro.federated.tiers`): a tier boundary carries arbitrary
+    statistics pytrees, so each matrix leaf crosses independently under the
+    tier's format.  ``sketch`` is rejected — it is a client-uplink format
+    for PSD second moments, not a generic tier wire.
+    """
+    if fmt.kind == "fp32":
+        return x
+    if fmt.kind == "fp8":
+        return _fp8_roundtrip(x, fmt.tile)
+    if fmt.kind == "int8":
+        q, s = _quantize_int8(x, fmt.tile, use_kernel)
+        return _dequant_add_int8(
+            jnp.zeros_like(x, jnp.float32), q, s, fmt.tile, use_kernel
+        )
+    raise ValueError(
+        f"wire kind {fmt.kind!r} is not a tier-boundary format "
+        "(expected fp32 | int8 | fp8)"
+    )
+
+
+def matrix_roundtrip_add(
+    acc: jax.Array,
+    x: jax.Array,
+    fmt: WireFormat,
+    use_kernel: Optional[bool] = None,
+) -> jax.Array:
+    """Fold one matrix across a lossy tier boundary into an fp32 accumulator.
+
+    ``int8`` lands through the FUSED dequantize-accumulate (the dense
+    dequantized intermediate never exists); ``fp32`` is exactly ``acc + x``.
+    """
+    if fmt.kind == "fp32":
+        return acc + x
+    if fmt.kind == "int8":
+        q, s = _quantize_int8(x, fmt.tile, use_kernel)
+        return _dequant_add_int8(acc, q, s, fmt.tile, use_kernel)
+    return acc + matrix_roundtrip(x, fmt, use_kernel)
+
+
 def quant_spectral_bound(S: jax.Array, fmt: WireFormat) -> jax.Array:
     """Data-dependent bound on ‖E‖₂ of the quantization error E = Ŝ − S.
 

@@ -36,6 +36,17 @@ assemble by hand.  This module owns all of it:
   roundtrip into :meth:`DistContext.all_reduce` via ``wire_fn`` so the
   reduced payload actually IS the compressed one).
 
+The two-stage psum is the N=2 point of a general family:
+``DistConfig(tree=AggregationTree(...))`` (:mod:`repro.federated.tiers`)
+routes :meth:`DistContext.all_reduce` through an N-TIER reduction tree —
+one collective tier per mesh axis, leaf (edge) tier innermost, each tier
+carrying its own wire format priced at its own bandwidth
+(``CostModel.tiered_allreduce``).  An all-fp32 tree emits exactly the
+two-stage program, so tree routing is bitwise backward compatible; the
+engine's ``wire_fn`` stays the LEAF-side hook and is applied before the
+first tier crossing.
+
+
 Scheduling note: the engines place their all-reduce *after* the shard
 scan wherever the algebra allows (batch statistics, rounds), so feature
 extraction — the expensive leg of the scan — never serializes against
@@ -117,6 +128,18 @@ def shard_cohort(
     return tuple(c for i, c in enumerate(ordered) if i % n_shards == shard)
 
 
+def linear_shard_index(axis_names: Tuple[str, ...]):
+    """The caller's linearized position over the given mesh axes (valid
+    inside shard_map) — row-major in axis order, matching how a
+    ``PartitionSpec`` with a tuple entry linearizes the axes.  The
+    dist-owned async scatter uses it to find which slot block of the
+    sharded ring this device owns."""
+    idx = 0
+    for ax in axis_names:
+        idx = idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+    return idx
+
+
 def two_stage_psum(tree: Any, axis_names: Tuple[str, ...]) -> Any:
     """Hierarchical all-reduce: one psum per axis, innermost (last) first.
 
@@ -170,12 +193,21 @@ class DistConfig:
     defaults to every non-``"model"`` axis of the mesh (``("pod", "data")``
     on the multi-pod production mesh).  ``donate`` is the donate-the-state
     policy (applied through :func:`donate_argnums`).
+
+    ``tree`` routes :meth:`DistContext.all_reduce` through an N-tier
+    :class:`repro.federated.tiers.AggregationTree` instead of the
+    two-stage psum: one collective tier per reduce axis, LEAF TIER
+    INNERMOST (the tree's axes must equal the reversed resolved axes), so
+    an all-fp32 tree emits the identical program and stays bitwise
+    backward compatible, while per-tier wire formats compress the slow
+    upper crossings.  Requires ``"psum"``.
     """
 
     aggregation: str = "merge"  # "merge" | "psum"
     mesh_axes: Tuple[str, ...] = ()  # reduce axes ("psum"); () + mesh → data axes
     mesh: Optional[jax.sharding.Mesh] = None  # shard_map mesh (dist-owned scale-out)
     donate: bool = True  # donate the carried state to the dispatch
+    tree: Optional[Any] = None  # N-tier AggregationTree (repro.federated.tiers)
 
     def __post_init__(self):
         if self.aggregation not in ("merge", "psum"):
@@ -197,6 +229,15 @@ class DistConfig:
                     f"mesh_axes {sorted(unknown)} not in mesh axes "
                     f"{self.mesh.axis_names}"
                 )
+        if self.tree is not None:
+            if self.aggregation != "psum":
+                raise ValueError(
+                    "an aggregation tree routes the psum backend; merge "
+                    "has no collective to tier"
+                )
+            # duck-typed (tiers.py imports this module); the tree's
+            # collective tiers must cover the reduce axes leaf-innermost
+            self.tree.validate_mesh_axes(axes)
 
     @property
     def axis_names(self) -> Tuple[str, ...]:
@@ -209,6 +250,13 @@ class DistConfig:
     def data_shards(self) -> int:
         """Data-parallel way count of the owned mesh (1 without a mesh)."""
         return 1 if self.mesh is None else data_parallel_size(self.mesh)
+
+    @property
+    def lossy_tier_wire(self) -> Optional[Any]:
+        """The routed tree's coarsest lossy tier wire (``None`` when the
+        reduction is bit-exact) — engines consult it to pick the
+        PSD-guarded Cholesky when a tree crossing quantizes."""
+        return None if self.tree is None else self.tree.lossy_wire
 
 
 class DistContext:
@@ -270,11 +318,19 @@ class DistContext:
         dequantized ONCE at the aggregation boundary before the psum sums
         the received payloads.  ``None`` (and the ``"merge"`` backend,
         whose uplink compression happens per client inside the engine
-        fold) keeps the reduce bit-exact fp32."""
+        fold) keeps the reduce bit-exact fp32.
+
+        With ``cfg.tree`` set, the reduction runs the N-tier aggregation
+        tree instead — ``wire_fn`` stays the LEAF-side hook (applied
+        before the first tier crossing), then each collective tier
+        compresses + psums in leaf-first order.  All-fp32 trees emit the
+        identical two-stage program."""
         if self.cfg.aggregation == "merge":
             return tree
         if wire_fn is not None:
             tree = wire_fn(tree)
+        if self.cfg.tree is not None:
+            return self.cfg.tree.psum(tree)
         return two_stage_psum(tree, self.cfg.axis_names)
 
     def data_spec(self, axis: int = 0):

@@ -168,6 +168,7 @@ class AccumulationEngine(DistDispatchMixin):
         self.rff_params = rff_params
         self.wire = cfg.wire.resolved()  # fp8 → int8 fallback off-TPU
         self.dist = DistContext(cfg.dist, engine="accumulation")
+        self._tree_reduce_cache: dict = {}  # AggregationTree → jitted reduce
         # mesh mode: shard the leading (n_shards) axis of the packed arrays
         # over the data axes; accumulator/params replicated; all-reduced
         # output replicated
@@ -257,3 +258,20 @@ class AccumulationEngine(DistDispatchMixin):
                 jnp.asarray(packed.mask),
                 params,
             )
+
+    def reduce_payloads(self, payloads, tree) -> EngineStats:
+        """The host-side tiered fold entry point: reduce ``tree.leaves``
+        pre-computed :class:`EngineStats` payloads (edge aggregators'
+        round outputs) through an N-tier
+        :class:`repro.federated.tiers.AggregationTree` in ONE dispatch —
+        one fixed-order fold per tier, each boundary crossed in the tier's
+        wire format.  With fp32 wires the result is bitwise equal to
+        ``fed3r.merge``-folding the payloads flat."""
+        fn = self._tree_reduce_cache.get(tree)
+        if fn is None:
+            use_kernel = resolve_use_kernel(self.cfg.use_kernel)
+            fn = jax.jit(lambda ps: tree.reduce(ps, use_kernel=use_kernel))
+            self._tree_reduce_cache[tree] = fn
+        with self.dist.telemetry.span("reduce_payloads", engine="accumulation"):
+            self.dist.dispatch()
+            return fn(list(payloads))

@@ -142,6 +142,9 @@ class StreamingEngine(DistDispatchMixin):
         self.rff_params = rff_params
         self.wire = cfg.wire.resolved()  # fp8 → int8 fallback off-TPU
         self.dist = DistContext(cfg.dist, engine="streaming")
+        # a lossy tier in a routed aggregation tree quantizes the reduced
+        # Gram exactly like a lossy engine wire — same PSD guard applies
+        self._tree_wire = cfg.dist.lossy_tier_wire
         # mesh mode: shard the wave-WIDTH axis (dim 1; dim 0 is the scanned
         # arrival clock) over the data axes; state/params replicated
         sharded = self.dist.data_spec(axis=1)
@@ -241,14 +244,16 @@ class StreamingEngine(DistDispatchMixin):
             b = state.b + dB
             S_local = None
 
-        if self.wire.kind in ("int8", "fp8") and S_local is not None:
-            # quantization noise can push the smallest eigenvalues of the
-            # received Ŝ negative on rank-deficient waves (early stream, few
-            # samples ≪ d); factor with data-dependent jitter — a ridge of a
-            # few quantization steps, applied only when the plain Cholesky
-            # actually produced NaN
+        lossy = self.wire if self.wire.kind in ("int8", "fp8") else self._tree_wire
+        if lossy is not None and S_local is not None:
+            # quantization noise (engine wire OR a lossy tree tier) can push
+            # the smallest eigenvalues of the received Ŝ negative on
+            # rank-deficient waves (early stream, few samples ≪ d); factor
+            # with data-dependent jitter — a ridge of a few quantization
+            # steps, applied only when the plain Cholesky actually produced
+            # NaN
             L = compress.psd_cholesky(
-                G, compress.quant_spectral_bound(S_local, self.wire)
+                G, compress.quant_spectral_bound(S_local, lossy)
             )
         else:
             L = jnp.linalg.cholesky(G)
@@ -297,9 +302,10 @@ class StreamingEngine(DistDispatchMixin):
         """
         S_A, S_b, S_n = self.dist.all_reduce((A, b, n), wire_fn=self._wire_fn())
         G = state.L @ state.L.T + S_A
-        if self.wire.kind in ("int8", "fp8"):
+        lossy = self.wire if self.wire.kind in ("int8", "fp8") else self._tree_wire
+        if lossy is not None:
             L = compress.psd_cholesky(
-                G, compress.quant_spectral_bound(S_A, self.wire)
+                G, compress.quant_spectral_bound(S_A, lossy)
             )
         else:
             L = jnp.linalg.cholesky(G)
@@ -367,6 +373,16 @@ class StreamingEngine(DistDispatchMixin):
                 state, jnp.asarray(A), jnp.asarray(b),
                 jnp.asarray(n, dtype=jnp.float32),
             )
+
+    def tiered_absorber(self, tree, **kwargs):
+        """The N-tier fold entry point: an overlapped
+        :class:`repro.federated.tiers.TieredAbsorber` pipeline over this
+        engine (host-level tree; upper-tier reductions of segment t overlap
+        the lower folds of segment t+1).  Lazy import — tiers builds on
+        this module."""
+        from repro.federated.tiers import TieredAbsorber
+
+        return TieredAbsorber(self, tree, **kwargs)
 
     def refresh(self, state: StreamState) -> StreamState:
         """Force a classifier re-solve now (e.g. before a query burst)."""

@@ -414,6 +414,42 @@ class Telemetry:
                     emit(h.name, {**h.labels, "quantile": label}, h.quantile(q), "summary")
         return "\n".join(lines) + "\n"
 
+    def merge_snapshot(self, snap: dict) -> None:
+        """Fold another registry's :meth:`snapshot` into this one.
+
+        The multi-process aggregation path: subprocess benchmark workers
+        (``bench_scaleout.py``, ``bench_tiers.py`` — each pinned to its own
+        simulated device count) snapshot their own registries and the
+        parent merges them, so dispatch counters and flight-recorder
+        events survive the process boundary and ``check_regression.py``
+        reads scale-out dispatches from ``telemetry_*.json`` like every
+        other bench.  Counters ADD, gauges take the incoming last-write,
+        histograms merge bucket-wise (quantiles stay within one bucket of
+        the union stream), events append in arrival order (ring bounds
+        still apply).
+        """
+        for c in snap.get("counters", ()):
+            self.counter(c["name"], **c.get("labels", {})).inc(c["value"])
+        for g in snap.get("gauges", ()):
+            self.gauge(g["name"], **g.get("labels", {})).set(g["value"])
+        for rec in snap.get("histograms", ()):
+            h = self.histogram(rec["name"], **rec.get("labels", {}))
+            if not rec.get("count"):
+                continue
+            h.count += int(rec["count"])
+            h.sum += float(rec["sum"])
+            h.zero_count += int(rec.get("zero_count", 0))
+            if rec.get("min") is not None:
+                h.min = min(h.min, float(rec["min"]))
+            if rec.get("max") is not None:
+                h.max = max(h.max, float(rec["max"]))
+            for idx, n in rec.get("buckets", {}).items():
+                idx = int(idx)
+                h.counts[idx] = h.counts.get(idx, 0) + int(n)
+        for ev in snap.get("events", ()):
+            self.event(ev.get("kind", "event"), **ev.get("fields", {}))
+        self.events_dropped += int(snap.get("events_dropped", 0))
+
     def reset(self) -> None:
         """Zero every metric in place and clear the event ring (instances
         hold live references to their cells, so cells are zeroed, not

@@ -8,6 +8,12 @@ axis but "model" — and all-reduces the d² statistics hierarchically:
 intra-pod over ICI first, then cross-pod over DCN (the two stages are
 costed separately by ``repro.federated.costs.CostModel``).
 
+Beyond two stages, :func:`make_tier_host_mesh` builds N-axis TIER meshes
+(edge → region → cloud) for the generalized aggregation trees of
+:mod:`repro.federated.tiers`: one mesh axis per tier, innermost axis =
+leaf tier, each tier priced at its own bandwidth (``ICI_BW`` / ``DCN_BW``
+/ ``WAN_BW``) by ``CostModel.tiered_allreduce``.
+
 ``make_production_mesh`` is a FUNCTION (not a module constant) so importing
 this module never touches jax device state — required because the dry-run
 must set ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the
@@ -28,6 +34,15 @@ PEAK_FLOPS_BF16 = 197e12  # per chip
 HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link (~per-chip effective for ring collectives)
 DCN_BW = 12.5e9  # bytes/s per pod boundary (~100 Gbps cross-pod effective)
+WAN_BW = 1.25e9  # bytes/s cross-region (~10 Gbps effective over WAN)
+
+# Per-tier bandwidth lookup for aggregation trees: edge folds ride ICI,
+# region crossings ride DCN, cloud crossings ride the WAN.
+TIER_BANDWIDTHS = {"ici": ICI_BW, "dcn": DCN_BW, "wan": WAN_BW}
+
+# Default axis names for N-tier host meshes, outermost (slowest) first.
+# The leaf tier keeps the name "edge"; a 1-tier mesh degenerates to it.
+_TIER_AXIS_NAMES = ("cloud", "region", "edge")
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -63,6 +78,51 @@ def make_host_mesh(model_parallel: int = 1, *, pods: int = 1) -> jax.sharding.Me
             (pods, data, model_parallel), ("pod", "data", "model")
         )
     return jax.make_mesh((data, model_parallel), ("data", "model"))
+
+
+def make_tier_host_mesh(
+    tier_shape: Tuple[int, ...],
+    tier_names: Tuple[str, ...] = (),
+    model_parallel: int = 1,
+) -> jax.sharding.Mesh:
+    """N-tier mesh over local devices: one axis per tier + "model".
+
+    ``tier_shape`` lists tier sizes OUTERMOST FIRST (cloud → edge), so the
+    trailing tier axis is the leaf/edge tier — the same outer-to-inner
+    convention as ("pod", "data").  Default names for ≤3 tiers are drawn
+    from ("cloud", "region", "edge") right-aligned; deeper trees must name
+    their axes explicitly.  All tier axes are batch-carrying (returned by
+    :func:`data_axes`), so the engines' packers and the aggregation trees
+    of :mod:`repro.federated.tiers` see them uniformly.
+
+    Raises ``ValueError`` when the device count does not factor as
+    prod(tier_shape) × model_parallel, or when names/shape disagree.
+    """
+    if not tier_shape or any(s < 1 for s in tier_shape):
+        raise ValueError(f"tier_shape must be non-empty positive ints, got {tier_shape}")
+    if not tier_names:
+        if len(tier_shape) > len(_TIER_AXIS_NAMES):
+            raise ValueError(
+                f"{len(tier_shape)} tiers need explicit tier_names "
+                f"(defaults cover {len(_TIER_AXIS_NAMES)})"
+            )
+        tier_names = _TIER_AXIS_NAMES[len(_TIER_AXIS_NAMES) - len(tier_shape):]
+    if len(tier_names) != len(tier_shape):
+        raise ValueError(f"tier_names {tier_names} do not match tier_shape {tier_shape}")
+    if "model" in tier_names:
+        raise ValueError('"model" is reserved for the model-parallel axis')
+    n = len(jax.devices())
+    want = model_parallel
+    for s in tier_shape:
+        want *= s
+    if n != want:
+        raise ValueError(
+            f"{n} devices do not factor as tiers {tier_shape} × "
+            f"model_parallel={model_parallel}"
+        )
+    return jax.make_mesh(
+        tuple(tier_shape) + (model_parallel,), tuple(tier_names) + ("model",)
+    )
 
 
 def data_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:

@@ -36,6 +36,53 @@ def _fmt_val(v) -> str:
     return f"{f:.6g}"
 
 
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024.0 or unit == "GiB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
+        n /= 1024.0
+    return f"{n:.1f}GiB"
+
+
+def _render_tree(snapshot: dict) -> list:
+    """The aggregation-tree block: one line per tier (leaf tier first),
+    drawn from the ``tier_wire_bytes_total`` / ``tier_batches_total``
+    counters the :class:`repro.federated.tiers.TieredAbsorber` meters at
+    every boundary crossing."""
+    per_tier: dict = {}
+    for c in snapshot.get("counters", []):
+        if c.get("name") not in ("tier_wire_bytes_total", "tier_batches_total"):
+            continue
+        lb = c.get("labels", {})
+        key = (int(lb.get("level", 0)), str(lb.get("tier", "?")))
+        row = per_tier.setdefault(key, {"wire": lb.get("wire", "fp32")})
+        if c["name"] == "tier_wire_bytes_total":
+            row["bytes"] = row.get("bytes", 0) + c["value"]
+            if "wire" in lb:
+                row["wire"] = lb["wire"]
+        else:
+            row["batches"] = row.get("batches", 0) + c["value"]
+    if not per_tier:
+        return []
+    stale = {}
+    for ev in snapshot.get("events", []):
+        if ev.get("kind") == "tier_staleness_exceeded":
+            t = str(ev.get("fields", {}).get("tier", "?"))
+            stale[t] = stale.get(t, 0) + 1
+    out = ["aggregation tree (leaf tier first):"]
+    for i, ((level, tier), row) in enumerate(sorted(per_tier.items())):
+        branch = "  " * level + ("└─ " if level else "")
+        line = (
+            f"  {branch}{tier:<10} wire={row['wire']:<5}"
+            f" batches={_fmt_val(row.get('batches', 0)):>6}"
+            f" bytes={_fmt_bytes(float(row.get('bytes', 0))):>10}"
+        )
+        if stale.get(tier):
+            line += f"  staleness_exceeded={stale[tier]}"
+        out.append(line)
+    return out
+
+
 def render(snapshot: dict, *, events: int = 20) -> str:
     """The human report for one snapshot dict."""
     out = []
@@ -44,6 +91,7 @@ def render(snapshot: dict, *, events: int = 20) -> str:
         out.append("dispatches (host→device, per engine):")
         for eng, n in sorted(disp.items()):
             out.append(f"  {eng:<16} {n}")
+    out.extend(_render_tree(snapshot))
     counters = [
         c for c in snapshot.get("counters", [])
         if c.get("name") != "engine_dispatches_total"
